@@ -1,0 +1,78 @@
+"""Shared benchmark harness for the paper-figure reproductions.
+
+Each ``figNN_*.py`` module exposes ``run(fast: bool) -> list[dict]`` returning
+CSV-able rows; ``benchmarks.run`` executes all of them and tees a combined
+CSV.  ``fast=True`` (default in CI) shrinks sizes/seeds; ``--full`` matches
+the paper's grid (sizes 100-700, 10 runs per DAX).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (CRCHConfig, CloudEnvironment, aggregate, baselines,
+                        generate_workflow, metrics_from_result, plan,
+                        sample_failure_trace, sim_config, simulate)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+ENVS = ("stable", "normal", "unstable")
+
+
+def make_setup(kind: str, size: int, *, seed: int = 0):
+    wf = generate_workflow(kind, size, seed=seed)
+    env = CloudEnvironment(wf, 20, seed=seed + 1)
+    return wf, env
+
+
+def run_algo(algo: str, wf, env, envname: str, n_runs: int, *,
+             crch_cfg: CRCHConfig | None = None, seed0: int = 100):
+    """Run one algorithm over ``n_runs`` failure traces; return aggregates."""
+    crch_cfg = crch_cfg or CRCHConfig()
+    if algo == "crch":
+        p = plan(wf, env, crch_cfg, environment=envname)
+        sched, cfg = p.schedule, sim_config(p, crch_cfg)
+        extra = {"ckpt_lambda": p.ckpt_lambda,
+                 "rep_hist": np.bincount(p.rep_counts).tolist()}
+    elif algo == "heft":
+        sched, cfg = baselines.heft_plan(wf, env), baselines.heft_sim_config()
+        extra = {}
+    elif algo == "ra3":
+        sched = baselines.replicate_all_plan(wf, env, 3)
+        cfg = baselines.replicate_all_sim_config()
+        extra = {}
+    else:
+        raise ValueError(algo)
+    horizon = 40.0 * sched.makespan
+    runs = []
+    t0 = time.perf_counter()
+    for i in range(n_runs):
+        tr = sample_failure_trace(envname, env.n_vms, horizon_s=horizon,
+                                  seed=seed0 + i)
+        res = simulate(sched, tr, cfg)
+        runs.append(metrics_from_result(sched, res))
+    agg = aggregate(runs)
+    agg["wall_s"] = time.perf_counter() - t0
+    agg.update(extra)
+    return agg
+
+
+def emit(name: str, rows: list[dict]) -> list[dict]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return rows
+
+
+def print_csv(name: str, rows: list[dict]) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    print(f"# {name}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(f"{r.get(k, '')}" if not isinstance(r.get(k), float)
+                       else f"{r[k]:.4g}" for k in keys))

@@ -1,0 +1,30 @@
+"""Fig. 4 — Total Execution Time: CRCH vs HEFT (stable/normal), Montage.
+
+The paper plots TET across workflow sizes for the stable and normal
+environments (HEFT cannot execute unstable runs).
+"""
+from __future__ import annotations
+
+from . import _harness as H
+
+
+def run(fast: bool = True):
+    sizes = (100, 300) if fast else (100, 200, 300, 400, 500, 600, 700)
+    n_runs = 5 if fast else 10
+    rows = []
+    for size in sizes:
+        wf, env = H.make_setup("montage", size)
+        for envname in ("stable", "normal"):
+            for algo in ("crch", "heft"):
+                a = H.run_algo(algo, wf, env, envname, n_runs)
+                rows.append({
+                    "figure": "fig04", "workflow": "montage", "size": size,
+                    "env": envname, "algo": algo, "tet": a["tet"],
+                    "success_rate": a["success_rate"],
+                    "resubmissions": a["resubmissions"],
+                })
+    return H.emit("fig04_tet", rows)
+
+
+if __name__ == "__main__":
+    H.print_csv("fig04_tet", run(True))

@@ -1,0 +1,31 @@
+"""Fig. 6 — Clustering overhead vs max replication count (supercluster K).
+
+Higher K -> more superclusters -> higher replica budget -> TET grows; K=1
+(no replicas) pays resubmission latency instead (paper Section 4.2).
+"""
+from __future__ import annotations
+
+from repro.core import CRCHConfig
+
+from . import _harness as H
+
+
+def run(fast: bool = True):
+    ks = (1, 2, 4, 6) if fast else (1, 2, 3, 4, 5, 6, 7, 8)
+    n_runs = 5 if fast else 10
+    wf, env = H.make_setup("montage", 100 if fast else 300)
+    rows = []
+    for envname in ("normal", "unstable") if fast else H.ENVS:
+        for k in ks:
+            cfg = CRCHConfig(max_rep_count=k)
+            a = H.run_algo("crch", wf, env, envname, n_runs, crch_cfg=cfg)
+            rows.append({
+                "figure": "fig06", "env": envname, "max_rep_count": k,
+                "tet": a["tet"], "usage_frac": a["usage_frac"],
+                "resubmissions": a["resubmissions"],
+            })
+    return H.emit("fig06_maxrep", rows)
+
+
+if __name__ == "__main__":
+    H.print_csv("fig06_maxrep", run(True))

@@ -1,0 +1,23 @@
+"""Fig. 10 — Average Standard Length Ratio (SLR): CRCH/HEFT/RA3."""
+from __future__ import annotations
+
+from . import _harness as H
+
+
+def run(fast: bool = True):
+    n_runs = 5 if fast else 10
+    wf, env = H.make_setup("montage", 100 if fast else 300)
+    rows = []
+    for envname in H.ENVS:
+        for algo in ("crch", "heft", "ra3"):
+            a = H.run_algo(algo, wf, env, envname, n_runs)
+            rows.append({
+                "figure": "fig10", "workflow": "montage", "env": envname,
+                "algo": algo, "slr": a["slr"],
+                "success_rate": a["success_rate"],
+            })
+    return H.emit("fig10_slr", rows)
+
+
+if __name__ == "__main__":
+    H.print_csv("fig10_slr", run(True))

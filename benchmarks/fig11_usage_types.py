@@ -1,0 +1,29 @@
+"""Fig. 11 — Resource Usage across workflow types (CRCH and RA3).
+
+The paper's trend: LIGO >> CyberShake > SIPHT/Montage in CPU intensity, so
+usage rises accordingly; under RA3 the futile-replication usage flattens the
+between-workflow differences relative to CRCH.
+"""
+from __future__ import annotations
+
+from . import _harness as H
+
+
+def run(fast: bool = True):
+    n_runs = 4 if fast else 10
+    rows = []
+    for kind in ("montage", "cybershake", "ligo", "sipht"):
+        wf, env = H.make_setup(kind, 100 if fast else 300)
+        for envname in H.ENVS:
+            for algo in ("crch", "ra3"):
+                a = H.run_algo(algo, wf, env, envname, n_runs)
+                rows.append({
+                    "figure": "fig11", "workflow": kind, "env": envname,
+                    "algo": algo, "usage_frac": a["usage_frac"],
+                    "usage": a["usage"],
+                })
+    return H.emit("fig11_usage_types", rows)
+
+
+if __name__ == "__main__":
+    H.print_csv("fig11_usage_types", run(True))

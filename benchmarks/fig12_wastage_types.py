@@ -1,0 +1,24 @@
+"""Fig. 12 — Resource Wastage across workflow types (CRCH and RA3)."""
+from __future__ import annotations
+
+from . import _harness as H
+
+
+def run(fast: bool = True):
+    n_runs = 4 if fast else 10
+    rows = []
+    for kind in ("montage", "cybershake", "ligo", "sipht"):
+        wf, env = H.make_setup(kind, 100 if fast else 300)
+        for envname in H.ENVS:
+            for algo in ("crch", "ra3"):
+                a = H.run_algo(algo, wf, env, envname, n_runs)
+                rows.append({
+                    "figure": "fig12", "workflow": kind, "env": envname,
+                    "algo": algo, "wastage_frac": a["wastage_frac"],
+                    "wastage": a["wastage"],
+                })
+    return H.emit("fig12_wastage_types", rows)
+
+
+if __name__ == "__main__":
+    H.print_csv("fig12_wastage_types", run(True))

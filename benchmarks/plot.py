@@ -1,0 +1,176 @@
+"""Render the paper-figure benchmarks to PNGs.
+
+    PYTHONPATH=src python -m benchmarks.plot        # reads benchmarks/out/*.json
+
+Produces one PNG per reproduced figure under ``benchmarks/out/plots/``,
+styled after the paper's bar/line charts (Figs. 4-12).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "out")
+PLOTS = os.path.join(OUT, "plots")
+
+ALGO_COLOR = {"crch": "#2b6cb0", "heft": "#c05621", "ra3": "#718096",
+              "crch_ckpt": "#2b6cb0", "scr": "#718096", "ri": "#38a169"}
+ALGO_LABEL = {"crch": "CRCH", "heft": "HEFT", "ra3": "ReplicateAll(3)",
+              "crch_ckpt": "CRCH ckpt", "scr": "SCR", "ri": "RI [7]"}
+
+
+def _load(name):
+    path = os.path.join(OUT, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _grouped_bars(ax, rows, xkey, ykey, series_key="algo"):
+    xs = sorted({r[xkey] for r in rows}, key=str)
+    series = sorted({r[series_key] for r in rows})
+    w = 0.8 / len(series)
+    for i, s in enumerate(series):
+        vals = []
+        for x in xs:
+            match = [r[ykey] for r in rows
+                     if r[xkey] == x and r[series_key] == s]
+            v = match[0] if match else float("nan")
+            vals.append(v if v == v else 0.0)
+        pos = [j + i * w for j in range(len(xs))]
+        ax.bar(pos, vals, w, label=ALGO_LABEL.get(s, s),
+               color=ALGO_COLOR.get(s, None))
+    ax.set_xticks([j + 0.4 - w / 2 for j in range(len(xs))])
+    ax.set_xticklabels([str(x) for x in xs])
+    ax.legend(fontsize=8)
+
+
+def fig04():
+    rows = _load("fig04_tet")
+    if not rows:
+        return
+    fig, axes = plt.subplots(1, 2, figsize=(9, 3.2), sharey=True)
+    for ax, env in zip(axes, ("stable", "normal")):
+        sub = [r for r in rows if r["env"] == env]
+        _grouped_bars(ax, sub, "size", "tet")
+        ax.set_title(f"{env} environment")
+        ax.set_xlabel("workflow size")
+    axes[0].set_ylabel("TET (s)")
+    fig.suptitle("Fig 4 — Total Execution Time (Montage)")
+    fig.tight_layout()
+    fig.savefig(os.path.join(PLOTS, "fig04_tet.png"), dpi=120)
+
+
+def _env_bars(name, ykey, title, ylabel):
+    rows = _load(name)
+    if not rows:
+        return
+    fig, ax = plt.subplots(figsize=(5.5, 3.2))
+    _grouped_bars(ax, rows, "env", ykey)
+    ax.set_title(title)
+    ax.set_ylabel(ylabel)
+    fig.tight_layout()
+    fig.savefig(os.path.join(PLOTS, f"{name}.png"), dpi=120)
+
+
+def fig05():
+    rows = _load("fig05_cov")
+    if not rows:
+        return
+    fig, ax = plt.subplots(figsize=(5.5, 3.2))
+    for env in sorted({r["env"] for r in rows}):
+        sub = sorted((r for r in rows if r["env"] == env),
+                     key=lambda r: r["cov_threshold"])
+        ax.plot([r["cov_threshold"] for r in sub], [r["tet"] for r in sub],
+                marker="o", label=env)
+    ax.set_xlabel("coverage-of-variance threshold")
+    ax.set_ylabel("avg TET (s)")
+    ax.set_title("Fig 5 — Clustering overhead vs COV")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(PLOTS, "fig05_cov.png"), dpi=120)
+
+
+def fig06():
+    rows = _load("fig06_maxrep")
+    if not rows:
+        return
+    fig, ax = plt.subplots(figsize=(5.5, 3.2))
+    for env in sorted({r["env"] for r in rows}):
+        sub = sorted((r for r in rows if r["env"] == env),
+                     key=lambda r: r["max_rep_count"])
+        ax.plot([r["max_rep_count"] for r in sub], [r["tet"] for r in sub],
+                marker="s", label=env)
+    ax.set_xlabel("max replication count (K superclusters)")
+    ax.set_ylabel("avg TET (s)")
+    ax.set_title("Fig 6 — TET vs max replication count")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(PLOTS, "fig06_maxrep.png"), dpi=120)
+
+
+def fig07():
+    rows = _load("fig07_checkpoint")
+    if not rows:
+        return
+    fig, (a, b) = plt.subplots(1, 2, figsize=(9, 3.2))
+    _grouped_bars(a, [r for r in rows if r["figure"] == "fig07a"],
+                  "env", "tet")
+    a.set_title("7a — CRCH ckpt vs SCR (TET)")
+    a.set_ylabel("TET (s)")
+    sub = sorted((r for r in rows if r["figure"] == "fig07b"),
+                 key=lambda r: r["lambda"])
+    b.plot([r["lambda"] for r in sub], [r["tet"] for r in sub], marker="o",
+           color="#2b6cb0")
+    b.set_xscale("log")
+    b.set_xlabel("checkpoint interval lambda (s)")
+    b.set_title("7b — TET vs lambda (stable, no replicas)")
+    fig.tight_layout()
+    fig.savefig(os.path.join(PLOTS, "fig07_checkpoint.png"), dpi=120)
+
+
+def fig11_12():
+    for name, ykey, title in (
+            ("fig11_usage_types", "usage_frac", "Fig 11 — usage by workflow"),
+            ("fig12_wastage_types", "wastage_frac",
+             "Fig 12 — wastage by workflow")):
+        rows = _load(name)
+        if not rows:
+            continue
+        envs = sorted({r["env"] for r in rows})
+        fig, axes = plt.subplots(1, len(envs), figsize=(11, 3.2),
+                                 sharey=True)
+        for ax, env in zip(axes, envs):
+            _grouped_bars(ax, [r for r in rows if r["env"] == env],
+                          "workflow", ykey)
+            ax.set_title(env)
+            ax.tick_params(axis="x", rotation=30)
+        axes[0].set_ylabel(ykey)
+        fig.suptitle(title)
+        fig.tight_layout()
+        fig.savefig(os.path.join(PLOTS, f"{name}.png"), dpi=120)
+
+
+def main() -> None:
+    os.makedirs(PLOTS, exist_ok=True)
+    fig04()
+    fig05()
+    fig06()
+    fig07()
+    _env_bars("fig08_usage", "usage_frac",
+              "Fig 8 — Avg Resource Usage (frac TET)", "usage / TET")
+    _env_bars("fig09_wastage", "wastage_frac",
+              "Fig 9 — Avg Resource Wastage (frac TET)", "wastage / TET")
+    _env_bars("fig10_slr", "slr", "Fig 10 — Avg SLR", "SLR")
+    fig11_12()
+    made = sorted(os.listdir(PLOTS))
+    print(f"wrote {len(made)} plots to {PLOTS}: {made}")
+
+
+if __name__ == "__main__":
+    main()

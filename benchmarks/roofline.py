@@ -1,0 +1,138 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) cell on the single-pod mesh:
+
+  compute term    = FLOPs / (chips * peak)           [analytic FLOPs; XLA's
+                    cost_analysis counts loop bodies once -- see
+                    tests/test_analysis.py for the validation of the
+                    analytic model against unrolled-HLO counts]
+  memory term     = HBM bytes / (chips * hbm_bw)
+  collective term = link bytes / (chips * link_bw)   [trip-count-scaled HLO
+                    parse of all-gather/all-reduce/reduce-scatter/
+                    all-to-all/collective-permute; ring factors applied]
+
+Hardware (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--csv out]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.analysis import flops as F
+from repro.analysis import hlo as H
+from repro.configs import ARCHS, get_config
+from repro.launch import shapes as shp
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+CHIPS = {"single": 256, "multi": 512}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "out", "dryrun")
+
+
+def analyze_cell(arch: str, shape_name: str, mesh: str) -> dict | None:
+    jpath = os.path.join(DRYRUN_DIR, f"{arch}__{shape_name}__{mesh}.json")
+    if not os.path.exists(jpath):
+        return None
+    row = json.load(open(jpath))
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh,
+           "status": row["status"]}
+    if row["status"] != "ok":
+        out["reason"] = row.get("reason", row.get("error", ""))[:100]
+        return out
+    cfg = get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    chips = CHIPS[mesh]
+    cost = F.cell_flops(cfg, shape)
+
+    # collective bytes: trip-count-scaled HLO parse (per-device already)
+    hpath = os.path.join(DRYRUN_DIR, f"{arch}__{shape_name}__{mesh}.hlo.gz")
+    if os.path.exists(hpath):
+        totals = H.collective_totals(H.load_hlo(hpath))
+        link_bytes_dev = H.link_bytes(totals)
+        out["collective_detail"] = {k: int(v)
+                                    for k, v in totals["bytes"].items()}
+        tot_b = sum(totals["bytes"].values())
+        # fraction of collective bytes that are fp32: on this CPU backend a
+        # chunk of these are bf16 dot operands force-upcast (a TPU would
+        # move them in bf16) -- upper-bounds the inflation of the term
+        out["f32_share"] = (sum(totals.get("bytes_f32", {}).values())
+                            / tot_b if tot_b else 0.0)
+    else:
+        link_bytes_dev = 0.0
+        out["f32_share"] = 0.0
+
+    t_compute = cost.flops / (chips * PEAK_FLOPS)
+    t_memory = cost.hbm_bytes / (chips * HBM_BW)
+    t_coll = link_bytes_dev / LINK_BW          # per-device bytes already
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out.update(
+        flops=cost.flops,
+        model_flops=cost.model_flops,
+        useful_ratio=cost.model_flops / max(cost.flops, 1.0),
+        hbm_bytes=cost.hbm_bytes,
+        link_bytes_per_dev=link_bytes_dev,
+        t_compute_s=t_compute,
+        t_memory_s=t_memory,
+        t_collective_s=t_coll,
+        dominant=dominant,
+        # fraction of roofline: useful compute time / bound time
+        roofline_fraction=(cost.model_flops / (chips * PEAK_FLOPS))
+        / max(bound, 1e-12),
+        temp_gib=row["memory"].get("temp_size_in_bytes", 0) / 2**30,
+        args_gib=row["memory"].get("argument_size_in_bytes", 0) / 2**30,
+    )
+    return out
+
+
+def main() -> None:
+    global DRYRUN_DIR
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--dir", default=None,
+                    help="alternate dry-run artifact dir (e.g. a baseline "
+                         "snapshot for before/after comparisons)")
+    ap.add_argument("--json-out",
+                    default=os.path.join(os.path.dirname(__file__), "out",
+                                         "roofline.json"))
+    args = ap.parse_args()
+    if args.dir:
+        DRYRUN_DIR = args.dir
+
+    rows = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dom':>9s} {'useful':>7s} {'roofline':>9s} "
+           f"{'mem GiB':>8s} {'f32%':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for arch in ARCHS:
+        for shape_name in shp.SHAPES:
+            r = analyze_cell(arch, shape_name, args.mesh)
+            if r is None:
+                continue
+            rows.append(r)
+            if r["status"] != "ok":
+                print(f"{arch:24s} {shape_name:12s} "
+                      f"[{r['status']}: {r.get('reason', '')[:60]}]")
+                continue
+            print(f"{arch:24s} {shape_name:12s} {r['t_compute_s']:10.4g} "
+                  f"{r['t_memory_s']:10.4g} {r['t_collective_s']:10.4g} "
+                  f"{r['dominant']:>9s} {r['useful_ratio']:7.2f} "
+                  f"{r['roofline_fraction']:9.3f} "
+                  f"{r['temp_gib'] + r['args_gib']:8.2f} "
+                  f"{100 * r['f32_share']:5.0f}")
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"\nwrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

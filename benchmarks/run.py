@@ -1,0 +1,44 @@
+"""Run every paper-figure benchmark and print a combined CSV.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run            # fast grid
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-size grid
+  PYTHONPATH=src python -m benchmarks.run --only fig08 fig09
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+
+from . import _harness as H
+
+FIGS = [
+    "fig04_tet", "fig05_cov", "fig06_maxrep", "fig07_checkpoint",
+    "fig08_usage", "fig09_wastage", "fig10_slr",
+    "fig11_usage_types", "fig12_wastage_types",
+    "tab_ri_comparison",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size grid (sizes up to 700, 10 runs/DAX)")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="figure-name prefixes to run")
+    args = ap.parse_args()
+
+    for name in FIGS:
+        if args.only and not any(name.startswith(o) for o in args.only):
+            continue
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.perf_counter()
+        rows = mod.run(fast=not args.full)
+        wall = time.perf_counter() - t0
+        H.print_csv(name, rows)
+        print(f"# {name}: {len(rows)} rows in {wall:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

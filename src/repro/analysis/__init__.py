@@ -1,0 +1,1 @@
+from . import flops, hlo  # noqa: F401

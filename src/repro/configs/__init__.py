@@ -1,0 +1,47 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full published configuration;
+``get_config(name, tiny=True)`` returns the reduced same-family config used
+by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCHS = (
+    "deepseek_coder_33b",
+    "command_r_plus_104b",
+    "olmo_1b",
+    "granite_20b",
+    "phi35_moe_42b",
+    "granite_moe_1b",
+    "recurrentgemma_2b",
+    "llava_next_mistral_7b",
+    "rwkv6_3b",
+    "whisper_small",
+)
+
+# CLI ids (--arch <id>) -> module names
+ALIASES = {
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "olmo-1b": "olmo_1b",
+    "granite-20b": "granite_20b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "rwkv6-3b": "rwkv6_3b",
+    "whisper-small": "whisper_small",
+}
+
+
+def get_config(name: str, *, tiny: bool = False):
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", ""))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.tiny() if tiny else mod.CONFIG
+
+
+def all_configs(*, tiny: bool = False):
+    return {a: get_config(a, tiny=tiny) for a in ARCHS}

@@ -1,0 +1,35 @@
+"""CRCH core: the paper's contribution as a composable library.
+
+Pipeline (paper Fig. 1):
+  features -> PCA -> triplet clustering -> replication counts (Algorithm 1)
+  -> over-provisioned HEFT (Algorithm 2) -> CheckpointHEFT runtime
+  (Algorithm 3) with the Lemma-3.1 dynamic checkpoint interval.
+"""
+from .workflow import Task, Workflow, CloudEnvironment, generate_workflow, WORKFLOW_TYPES
+from .failures import Environment, ENVIRONMENTS, FailureTrace, sample_failure_trace
+from .features import task_features, FEATURE_NAMES, b_levels, t_levels
+from .pca import PCAResult, fit_pca
+from .clustering import pairwise_distances, triplet_agglomerate, replication_counts
+from .heft import Placement, Schedule, heft_schedule
+from .runtime import CkptLevel, SimConfig, SimResult, simulate
+from .crch import CRCHConfig, CRCHPlan, plan, run, sim_config
+from .metrics import RunMetrics, metrics_from_result, aggregate
+from .mlp_classifier import MLPConfig, ReplicationMLP
+from .resubmission_impact import resubmission_impact_counts
+from .dax import load_dax, parse_dax
+from . import baselines, checkpoint_policy
+
+__all__ = [
+    "Task", "Workflow", "CloudEnvironment", "generate_workflow", "WORKFLOW_TYPES",
+    "Environment", "ENVIRONMENTS", "FailureTrace", "sample_failure_trace",
+    "task_features", "FEATURE_NAMES", "b_levels", "t_levels",
+    "PCAResult", "fit_pca",
+    "pairwise_distances", "triplet_agglomerate", "replication_counts",
+    "Placement", "Schedule", "heft_schedule",
+    "CkptLevel", "SimConfig", "SimResult", "simulate",
+    "CRCHConfig", "CRCHPlan", "plan", "run", "sim_config",
+    "RunMetrics", "metrics_from_result", "aggregate",
+    "MLPConfig", "ReplicationMLP", "resubmission_impact_counts",
+    "load_dax", "parse_dax",
+    "baselines", "checkpoint_policy",
+]

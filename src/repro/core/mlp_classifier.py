@@ -1,0 +1,109 @@
+"""Supervised replication-count learning (paper Section 3.1.1, Eqs. 3-4).
+
+The paper: "When substantial labeled training data is present, a
+Multilayered Perceptron works reasonably well" -- a softmax classifier
+P_j(t_i) = exp(F_i . W_j) / sum_k exp(F_i . W_k) trained with cross-entropy
+(Eq. 4) and Adam.  Labels are scarce in practice (hence CRCH's unsupervised
+clustering), but once a site has accumulated (task-features -> chosen
+replication count) history, this learner *distills* the clustering policy
+and amortizes it to O(1) per task.
+
+Implemented in jnp (jit + Adam) with one hidden layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["MLPConfig", "ReplicationMLP"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    n_features: int
+    n_classes: int           # max replication count
+    hidden: int = 32
+    lr: float = 1e-2
+    epochs: int = 300
+    seed: int = 0
+
+
+def _init(cfg: MLPConfig):
+    k1, k2 = jax.random.split(jax.random.key(cfg.seed))
+    s1 = 1.0 / np.sqrt(cfg.n_features)
+    s2 = 1.0 / np.sqrt(cfg.hidden)
+    return {
+        "w1": s1 * jax.random.normal(k1, (cfg.n_features, cfg.hidden)),
+        "b1": jnp.zeros((cfg.hidden,)),
+        "w2": s2 * jax.random.normal(k2, (cfg.hidden, cfg.n_classes)),
+        "b2": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _logits(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def _loss(params, x, y_onehot):
+    """Eq. (4): mean cross-entropy of the softmax in Eq. (3)."""
+    logp = jax.nn.log_softmax(_logits(params, x), axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _adam_epoch(params, m, v, t, x, y, *, lr: float):
+    g = jax.grad(_loss)(params, x, y)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = t + 1
+
+    def upd(p, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / (1 - b1 ** t)
+        vh = v2 / (1 - b2 ** t)
+        return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
+
+    out = jax.tree.map(upd, params, g, m, v)
+    leaf = lambda n: jax.tree.map(lambda u: u[n], out,
+                                  is_leaf=lambda u: isinstance(u, tuple))
+    return leaf(0), leaf(1), leaf(2), t
+
+
+class ReplicationMLP:
+    """Fit on (features, counts) pairs; predict counts for new tasks."""
+
+    def __init__(self, cfg: MLPConfig):
+        self.cfg = cfg
+        self.params = _init(cfg)
+        self.mean = np.zeros(cfg.n_features)
+        self.scale = np.ones(cfg.n_features)
+
+    def fit(self, features: np.ndarray, counts: np.ndarray) -> float:
+        x = np.asarray(features, np.float32)
+        self.mean = x.mean(0)
+        self.scale = np.where(x.std(0) < 1e-9, 1.0, x.std(0))
+        x = jnp.asarray((x - self.mean) / self.scale)
+        y = jax.nn.one_hot(jnp.asarray(counts, jnp.int32) - 1,
+                           self.cfg.n_classes)
+        m = jax.tree.map(jnp.zeros_like, self.params)
+        v = jax.tree.map(jnp.zeros_like, self.params)
+        t = jnp.zeros((), jnp.int32)
+        params = self.params
+        for _ in range(self.cfg.epochs):
+            params, m, v, t = _adam_epoch(params, m, v, t, x, y,
+                                          lr=self.cfg.lr)
+        self.params = params
+        return float(_loss(params, x, y))
+
+    def predict(self, features: np.ndarray) -> np.ndarray:
+        x = jnp.asarray((np.asarray(features, np.float32) - self.mean)
+                        / self.scale)
+        return np.asarray(jnp.argmax(_logits(self.params, x), -1) + 1)
+
+    def accuracy(self, features: np.ndarray, counts: np.ndarray) -> float:
+        return float(np.mean(self.predict(features) == np.asarray(counts)))

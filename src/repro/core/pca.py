@@ -1,0 +1,67 @@
+"""PCA with a coverage-of-variance stopping rule (Algorithm 1, steps 2-10).
+
+The paper whitens (mean-subtract + standardize) the task features, then adds
+principal components one at a time until the cumulative explained variance
+exceeds a threshold (their optimum: COV in [0.3, 0.4], Fig. 5).
+
+Implemented with jnp so it runs on-accelerator alongside the clustering
+kernel; inputs are small (<= ~1e3 x 10) so this also JITs trivially.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PCAResult", "fit_pca", "project"]
+
+
+@dataclasses.dataclass
+class PCAResult:
+    mean: np.ndarray            # (F,)
+    scale: np.ndarray           # (F,)
+    components: np.ndarray      # (K, F) orthonormal rows
+    explained_ratio: np.ndarray  # (K,)
+    cov: float                  # cumulative coverage of variance actually reached
+    projected: np.ndarray       # (N, K)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _svd_whitened(x: jnp.ndarray):
+    mean = jnp.mean(x, axis=0)
+    std = jnp.std(x, axis=0)
+    std = jnp.where(std < 1e-12, 1.0, std)
+    xw = (x - mean) / std
+    # economy SVD of the whitened data: principal axes = rows of vt
+    u, s, vt = jnp.linalg.svd(xw, full_matrices=False)
+    var = (s * s) / jnp.maximum(x.shape[0] - 1, 1)
+    ratio = var / jnp.maximum(jnp.sum(var), 1e-12)
+    return mean, std, vt, ratio, xw
+
+
+def fit_pca(features: np.ndarray, threshold: float = 0.35) -> PCAResult:
+    """Fit PCA keeping the fewest components with sum(ratio) >= threshold."""
+    x = jnp.asarray(np.asarray(features, dtype=np.float64), dtype=jnp.float32)
+    mean, std, vt, ratio, xw = _svd_whitened(x)
+    ratio_np = np.asarray(ratio)
+    cum = np.cumsum(ratio_np)
+    k = int(np.searchsorted(cum, threshold) + 1)
+    k = min(max(k, 1), ratio_np.shape[0])
+    comps = np.asarray(vt)[:k]
+    proj = np.asarray(xw @ jnp.asarray(comps).T)
+    return PCAResult(
+        mean=np.asarray(mean),
+        scale=np.asarray(std),
+        components=comps,
+        explained_ratio=ratio_np[:k],
+        cov=float(cum[k - 1]),
+        projected=proj,
+    )
+
+
+def project(res: PCAResult, features: np.ndarray) -> np.ndarray:
+    xw = (np.asarray(features) - res.mean) / res.scale
+    return xw @ res.components.T

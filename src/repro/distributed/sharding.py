@@ -1,0 +1,103 @@
+"""Logical-axis sharding rules (MaxText-style) decoupled from model code.
+
+Model code annotates activations with *logical* axis names::
+
+    x = constrain(x, ("batch", "seq", "embed"))
+
+Inside a ``use_rules(mesh, rules)`` scope these map to mesh axes and become
+``jax.lax.with_sharding_constraint``; outside any scope they are no-ops, so
+the same model runs single-device (tests) and multi-pod (dry-run/train).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # sequence-parallel residual stream between blocks (Megatron-SP): the
+    # remat-saved carries shrink by the model-axis extent; XLA inserts the
+    # all-gather/reduce-scatter pairs around the TP matmuls
+    "seq_resid": "model",
+    "kv_seq": "model",        # sequence-sharded KV cache (flash-decoding)
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",           # d_ff tensor parallel
+    "vocab": "model",
+    "experts": "model",       # expert parallel
+    "expert_capacity": None,
+    "fsdp": "data",           # secondary param shard axis
+    "frames": None,
+    "lru": "model",
+}
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict | None = None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", DEFAULT_RULES)
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+def logical_to_spec(logical_axes: tuple[str | None, ...],
+                    rules: dict | None = None,
+                    mesh: Mesh | None = None) -> P:
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else current_mesh()
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    parts = []
+    for ax in logical_axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+        elif isinstance(m, tuple):
+            kept = tuple(a for a in m if a in axis_names)
+            parts.append(kept if kept else None)
+        else:
+            parts.append(m if m in axis_names else None)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical_axes: tuple[str | None, ...]) -> jax.Array:
+    """Apply a sharding constraint if a mesh scope is active, else no-op.
+    Axes whose dimension does not divide the mapped mesh extent fall back to
+    replication (e.g. batch=1 long_500k, whisper's 1500-frame sequences)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes)
+    parts = []
+    for dim, part in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if part is None:
+            parts.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        parts.append(part if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,9 @@
+from .checkpoint import CheckpointStore
+from .interval import DynamicInterval
+from .straggler import ReplicationPlanner, HostTelemetry
+from .coordinator import TrainingCoordinator, FaultInjector
+from .crosspod import PodGradientExchange
+
+__all__ = ["CheckpointStore", "DynamicInterval", "ReplicationPlanner",
+           "HostTelemetry", "TrainingCoordinator", "FaultInjector",
+           "PodGradientExchange"]

@@ -1,0 +1,54 @@
+"""Compressed cross-pod gradient exchange (DCN-aware, host level).
+
+Inside a pod, gradients reduce over ICI in bf16 (the jit'd step).  *Across*
+pods the DCN link is ~20x slower, so the pod-level reduction sends int8
+gradients with per-tensor scales and error feedback (repro.optim.
+grad_compression): 4x fewer DCN bytes than fp32 with a bias that vanishes
+over steps.  This module is the host-side transport simulation used by the
+tests and the fault_tolerant_train example; on real hardware the exchange
+maps 1:1 onto a DCN allgather of the int8 payloads.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.optim.grad_compression import (compress_tree_with_feedback,
+                                          decompress_tree)
+
+__all__ = ["PodGradientExchange"]
+
+
+class PodGradientExchange:
+    def __init__(self, n_pods: int):
+        self.n_pods = n_pods
+        self.residuals = [None] * n_pods   # error-feedback state per pod
+        self.bytes_sent_fp32 = 0
+        self.bytes_sent_int8 = 0
+
+    def _init_residuals(self, pod: int, grads):
+        if self.residuals[pod] is None:
+            self.residuals[pod] = jax.tree.map(
+                lambda g: np.zeros(g.shape, np.float32), grads)
+
+    def exchange(self, pod_grads: list):
+        """pod_grads[p] = gradient pytree from pod p.  Returns the averaged
+        (decompressed) gradient tree every pod ends up with."""
+        assert len(pod_grads) == self.n_pods
+        payloads = []
+        for p, g in enumerate(pod_grads):
+            self._init_residuals(p, g)
+            q, s, r = compress_tree_with_feedback(g, self.residuals[p])
+            self.residuals[p] = r
+            payloads.append((q, s))
+            for leaf in jax.tree.leaves(q):
+                self.bytes_sent_int8 += leaf.size        # int8: 1 B each
+                self.bytes_sent_fp32 += leaf.size * 4
+        # DCN allgather: every pod decompresses every payload and averages
+        trees = [decompress_tree(q, s) for q, s in payloads]
+        avg = jax.tree.map(lambda *xs: sum(xs) / self.n_pods, *trees)
+        return avg
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.bytes_sent_fp32 / max(self.bytes_sent_int8, 1)

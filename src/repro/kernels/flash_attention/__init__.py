@@ -1,0 +1,2 @@
+"""Flash attention (GQA, causal/full) Pallas TPU kernel."""
+from . import kernel, ops, ref  # noqa: F401

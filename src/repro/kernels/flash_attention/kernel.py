@@ -1,0 +1,101 @@
+"""Pallas TPU flash attention (forward), GQA + causal.
+
+TPU-native design: grid (B, H, Sq/Bq, Sk/Bk) with the KV index innermost so
+the online-softmax running statistics (m, l) and the output accumulator
+persist in VMEM scratch across KV steps of one query block.  Every matmul is
+MXU-shaped ((Bq, D) x (D, Bk) and (Bq, Bk) x (Bk, D) with D, Bq, Bk multiples
+of 128); masking/rescaling runs on the VPU in fp32.  GQA is expressed purely
+through the BlockSpec index maps (query head h reads KV head h // group), so
+no repeated-KV materialization ever exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  n_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (Bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                        s.shape, 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                        s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (Bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (Bq, Bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D); Sq % Bq == Sk % Bk == 0."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    assert h % kv == 0 and sq % block_q == 0 and sk % block_k == 0
+    group = h // kv
+    n_q, n_k = sq // block_q, sk // block_k
+    grid = (b, h, n_q, n_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(d), block_q=block_q,
+        block_k=block_k, causal=causal, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

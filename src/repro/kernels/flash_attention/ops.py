@@ -1,0 +1,29 @@
+"""Public wrapper: pad sequences to MXU blocks, call the kernel, slice."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D).  Pads Sq/Sk to block
+    multiples (padded keys are masked out by the causal/softmax path:
+    padded K rows produce NEG_INF scores via position masking only under
+    ``causal``; for bidirectional use, pass pre-padded inputs)."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    pq = -sq % block_q
+    pk = -sk % block_k
+    if pq or pk:
+        if not causal:
+            raise ValueError("non-causal inputs must be pre-padded")
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return out[:, :, :sq]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: GQA scaled-dot-product attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D) with H % KV == 0."""
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Pairwise Euclidean-distance (cluster affinity) kernel.
+
+The O(N^2) affinity matrix of CRCH's clustering module (paper Eq. 5) is the
+scheduler's compute hot spot.  ``kernel.py`` holds the Pallas TPU kernel,
+``ops.py`` the jitted public wrapper, ``ref.py`` the pure-jnp oracle.
+"""
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Public jitted wrapper: pad to MXU tiles, run the Pallas kernel, slice."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import pairwise_distance_pallas
+
+__all__ = ["pairwise_distance"]
+
+
+def pairwise_distance(points, *, block: int = 128, interpret: bool = False):
+    """Pairwise Euclidean distances via the Pallas TPU kernel.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (used for
+    validation in this repo; on TPU hardware leave it False).
+    """
+    x = jnp.asarray(points, jnp.float32)
+    n, f = x.shape
+    n_pad = -n % block
+    f_pad = -f % 128  # lane alignment for the MXU contraction
+    xp = jnp.pad(x, ((0, n_pad), (0, f_pad)))
+    out = pairwise_distance_pallas(xp, block_m=block, block_n=block,
+                                   interpret=interpret)
+    return out[:n, :n]

@@ -1,0 +1,2 @@
+"""RG-LRU linear-recurrence scan Pallas TPU kernel (RecurrentGemma)."""
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,21 @@
+"""Public wrapper: pad (B, S, W) to tile multiples and scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import lru_scan_pallas
+
+__all__ = ["lru_scan"]
+
+
+def lru_scan(a, b, *, interpret: bool = False,
+             block_b: int = 8, block_t: int = 128, block_w: int = 128):
+    bsz, s, w = a.shape
+    pb, pt, pw = -bsz % block_b, -s % block_t, -w % block_w
+    if pb or pt or pw:
+        pad = ((0, pb), (0, pt), (0, pw))
+        a = jnp.pad(a, pad)   # a=0 on padding keeps the recurrence inert
+        b = jnp.pad(b, pad)
+    h = lru_scan_pallas(a, b, block_b=block_b, block_t=block_t,
+                        block_w=block_w, interpret=interpret)
+    return h[:bsz, :s, :w]

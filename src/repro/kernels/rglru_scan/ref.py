@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the gated linear recurrence h_t = a_t h_{t-1} + b_t."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan(a, b, h0=None):
+    """a, b: (B, S, W); h0: (B, W) or None.  Returns (h (B,S,W), h_last)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]

@@ -1,0 +1,2 @@
+"""Chunked WKV6 (RWKV-6 "Finch") Pallas TPU kernel."""
+from . import kernel, ops, ref  # noqa: F401

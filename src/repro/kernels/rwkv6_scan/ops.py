@@ -1,0 +1,23 @@
+"""Public wrapper for the chunked WKV6 kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import wkv6_pallas
+
+__all__ = ["wkv6"]
+
+
+def wkv6(r, k, v, log_w, u, *, chunk: int = 16, interpret: bool = False):
+    """r,k,v,log_w: (B, H, T, N); u: (H, N).  Pads T to the chunk size;
+    padded tokens use log_w = 0 (decay 1) and k = 0 so the state is inert."""
+    b, h, t, n = r.shape
+    pt = -t % chunk
+    if pt:
+        pad4 = ((0, 0), (0, 0), (0, pt), (0, 0))
+        r = jnp.pad(r, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        log_w = jnp.pad(log_w, pad4)
+    out = wkv6_pallas(r, k, v, log_w, u, chunk=chunk, interpret=interpret)
+    return out[:, :, :t]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: sequential per-token WKV6 recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r, k, v, log_w, u, S0=None):
+    """r,k,v,log_w: (B, H, T, N); u: (H, N).
+    Returns (o (B,H,T,N_v), S_final (B,H,N,N))."""
+    b, h, t, n = r.shape
+    r32, k32, v32 = (x.astype(jnp.float32) for x in (r, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    if S0 is None:
+        S0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                      # (B,H,N)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        ot = jnp.einsum("bhn,bhnm->bhm", rt,
+                        S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, ot
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (r32, k32, v32, w))
+    S_fin, o = jax.lax.scan(step, S0, xs)
+    return o.transpose(1, 2, 0, 3).astype(r.dtype), S_fin

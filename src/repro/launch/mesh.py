@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import; real launches get the same topology from the TPU runtime.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = one v5e pod slice; 2x16x16 = two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "for the dry-run")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for CPU tests of the sharded code paths."""
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:1])

@@ -1,0 +1,87 @@
+"""Production serving launcher: prefill + batched greedy decode.
+
+On TPU this runs under the production mesh with the ZeRO-1/TP weight layout
+and the sequence-sharded KV cache; on CPU, ``--tiny`` validates the same
+code end-to-end.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --tiny \
+        --batch 4 --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed import params as pshard
+from repro.distributed.sharding import use_rules
+from repro.distributed.steps import make_prefill_step, make_serve_step
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.shapes import make_batch
+from repro.models import lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--mesh", choices=("debug", "single", "multi"),
+                    default="debug")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny)
+    mesh = (make_debug_mesh() if args.mesh == "debug" else
+            make_production_mesh(multi_pod=(args.mesh == "multi")))
+    cache_len = args.prompt_len + args.new_tokens + (cfg.n_image_tokens or 0)
+
+    with use_rules(mesh):
+        params = lm.init_params(jax.random.key(args.seed), cfg)
+        abstract = jax.eval_shape(lambda: params)
+        psh = pshard.param_shardings(abstract, mesh, zero1=True)
+        params = jax.device_put(params, psh)
+        prefill = jax.jit(make_prefill_step(
+            cfg, cache_len, q_chunk=min(1024, args.prompt_len)))
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+        batch = make_batch(cfg, batch=args.batch, seq=args.prompt_len,
+                           seed=args.seed)
+        prompts = {k: v for k, v in batch.items()
+                   if k in ("tokens", "frames", "image_embeds")}
+        t0 = time.time()
+        logits, cache = prefill(params, prompts)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        jax.block_until_ready(tok)
+        t_prefill = time.time() - t0
+
+        pos0 = args.prompt_len + (cfg.n_image_tokens or 0)
+        out = [np.asarray(tok)]
+        t0 = time.time()
+        for i in range(args.new_tokens - 1):
+            tok, logits, cache = serve(params, cache, tok,
+                                       jnp.int32(pos0 + i))
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+
+    gen = np.concatenate(out, axis=1)
+    tok_s = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)
+    print(f"arch={cfg.name} ({cfg.param_count() / 1e6:.0f}M params) "
+          f"batch={args.batch} prompt={args.prompt_len} "
+          f"new={args.new_tokens} mesh={args.mesh}")
+    print(f"prefill {t_prefill * 1e3:.0f} ms | decode "
+          f"{t_decode * 1e3 / max(args.new_tokens - 1, 1):.1f} ms/token "
+          f"({tok_s:.1f} tok/s aggregate)")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("sample:", gen[0][:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

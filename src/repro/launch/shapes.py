@@ -1,0 +1,122 @@
+"""Assigned input-shape sets and ShapeDtypeStruct input specs.
+
+Every (architecture x shape) cell is defined here; ``input_specs`` returns
+weak-type-correct ``jax.ShapeDtypeStruct`` stand-ins (no allocation) for the
+dry-run, and ``make_batch`` materializes small real batches for smoke tests.
+
+``decode_*`` / ``long_*`` shapes lower ``serve_step`` (one new token against
+a seq_len KV cache); ``long_500k`` requires sub-quadratic attention and runs
+only for the hybrid/SSM architectures (full-attention archs record a
+documented skip); encoder-only archs would skip decode shapes (all ten
+assigned archs have a decode path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
+}
+
+# long_500k only for sub-quadratic sequence mixing (see DESIGN.md)
+SUBQUADRATIC = {"hybrid", "ssm"}
+
+
+def cell_supported(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return False, "full quadratic attention: 500k decode infeasible"
+    return True, ""
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - cfg.n_image_tokens if cfg.n_image_tokens else seq_len
+
+
+def train_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    b, s = shape.global_batch, _text_len(cfg, shape.seq_len)
+    spec = {
+        "tokens": SDS((b, s), jnp.int32),
+        "targets": SDS((b, s), jnp.int32),
+        "loss_mask": SDS((b, s), jnp.float32),
+    }
+    if cfg.is_encdec:
+        spec["frames"] = SDS((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_image_tokens:
+        spec["image_embeds"] = SDS((b, cfg.n_image_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    return spec
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    b, s = shape.global_batch, _text_len(cfg, shape.seq_len)
+    spec = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        spec["frames"] = SDS((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_image_tokens:
+        spec["image_embeds"] = SDS((b, cfg.n_image_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    return spec
+
+
+def decode_input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    b = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, b, shape.seq_len, dtype=jnp.bfloat16))
+    return {
+        "cache": cache,
+        "tokens": SDS((b, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# real (small) batches for smoke tests / examples
+# ---------------------------------------------------------------------------
+
+def make_batch(cfg: ModelConfig, *, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    s = seq
+    out = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, s)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, s)),
+                               jnp.int32),
+        "loss_mask": jnp.ones((batch, s), jnp.float32),
+    }
+    if cfg.is_encdec:
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_frames, cfg.d_model)), jnp.bfloat16)
+    if cfg.n_image_tokens:
+        out["image_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_image_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    return out

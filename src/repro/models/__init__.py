@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from . import layers, lm, rglru, rwkv6
+
+__all__ = ["ModelConfig", "layers", "lm", "rglru", "rwkv6"]

@@ -1,0 +1,376 @@
+"""Shared model primitives: norms, rotary, GQA attention, MLP, MoE.
+
+Pure-functional (param pytrees of jnp arrays); compute in bf16 with fp32
+softmax/normalization; activation shardings are *logical* annotations via
+``repro.distributed.sharding.constrain``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(jnp.float32)
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p = {"scale": jnp.ones((d,), jnp.float32)}
+        if cfg.use_bias:
+            p["bias"] = jnp.zeros((d,), jnp.float32)
+        return p
+    if cfg.norm_type == "nonparametric_ln":   # OLMo
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg: ModelConfig, params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (nrm * params["scale"]).astype(x.dtype)
+    mean = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    nrm = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm_type == "layernorm":
+        nrm = nrm * params["scale"]
+        if "bias" in params:
+            nrm = nrm + params["bias"]
+    return nrm.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, full / local-window / cross; train + decode paths)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, d_model: int | None = None,
+                   n_heads: int | None = None, n_kv: int | None = None):
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.head_dim
+    ks = _split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd)),
+        "wk": dense_init(ks[1], (d, kv * hd)),
+        "wv": dense_init(ks[2], (d, kv * hd)),
+        "wo": dense_init(ks[3], (h * hd, d), in_axis=0),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, n_heads, n_kv, dtype):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if "bq" in p:
+        q, k, v = (q + p["bq"].astype(dtype), k + p["bk"].astype(dtype),
+                   v + p["bv"].astype(dtype))
+    q = q.reshape(b, s, n_heads, hd)
+    k = k.reshape(b, s, n_kv, hd)
+    v = v.reshape(b, s, n_kv, hd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, *, q_chunk: int = 1024):
+    """Chunked scaled-dot-product attention (GQA) with fp32 softmax.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D); mask(q_pos, k_pos) callable
+    returning a boolean (Bq, Sk) block, or None.  Scanning over query chunks
+    keeps the live score tensor at (B, H, q_chunk, Sk).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, kv, g, d)
+    # (B, KV, G, Sq, Sk) einsum operands
+    kT = k.transpose(0, 2, 3, 1)                      # (B, KV, D, Sk)
+
+    def block(q_blk, q_pos):
+        # q_blk: (B, C, KV, G, D).  No sharding constraint on the scores:
+        # GQA head counts (56, 96, 10, ...) rarely divide the model axis, and
+        # forcing heads->model here made GSPMD insert "involuntary full
+        # rematerialization" copies (+70 GiB/device on deepseek train_4k) --
+        # propagation from the projections picks a consistent (kv, g) split.
+        scores = jnp.einsum("bckgd,bkds->bkgcs", q_blk, kT,
+                            preferred_element_type=jnp.float32) * scale
+        if mask is not None:
+            m = mask(q_pos)                            # (C, Sk) bool
+            scores = jnp.where(m[None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgcs,bskd->bckgd", w.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+
+    if sq % q_chunk != 0:
+        # largest divisor of sq not exceeding q_chunk (llava's 576+text
+        # sequences are not power-of-two); tiny divisors -> single block
+        q_chunk = max((c for c in range(1, q_chunk + 1) if sq % c == 0),
+                      default=sq)
+        if q_chunk < 64:
+            q_chunk = sq
+    if sq <= q_chunk:
+        out = block(qg, jnp.arange(sq))
+    else:
+        n_blk = sq // q_chunk
+        qb = qg.reshape(b, n_blk, q_chunk, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+        pos = jnp.arange(sq).reshape(n_blk, q_chunk)
+
+        def body(_, inp):
+            qq, pp = inp
+            return None, block(qq, pp)
+
+        _, outs = jax.lax.scan(body, None, (qb, pos))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kv, g, d)
+    return out.reshape(b, sq, h, d)
+
+
+def attention_forward(p, x, cfg: ModelConfig, *, positions, mode: str,
+                      window: int = 0, n_heads=None, n_kv=None,
+                      context=None, q_chunk: int = 1024,
+                      return_kv: bool = False):
+    """mode: causal | local | bidir | cross (context = encoder output)."""
+    dtype = x.dtype
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    if mode == "cross":
+        b, s, _ = x.shape
+        hd = cfg.head_dim
+        q = (x @ p["wq"].astype(dtype)).reshape(b, s, h, hd)
+        sk = context.shape[1]
+        k = (context @ p["wk"].astype(dtype)).reshape(b, sk, kv, hd)
+        v = (context @ p["wv"].astype(dtype)).reshape(b, sk, kv, hd)
+        mask = None
+    else:
+        q, k, v = _project_qkv(p, x, cfg, h, kv, dtype)
+        if mode != "bidir":
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        sk = k.shape[1]
+        kpos = jnp.arange(sk)
+        if mode == "causal":
+            mask = lambda qp: qp[:, None] >= kpos[None, :]
+        elif mode == "local":
+            mask = lambda qp: ((qp[:, None] >= kpos[None, :]) &
+                               (qp[:, None] - kpos[None, :] < window))
+        elif mode == "bidir":
+            mask = None
+        else:
+            raise ValueError(mode)
+    q = constrain(q, ("batch", "seq", None, None))
+    out = _sdpa(q, k, v, mask, q_chunk=q_chunk)
+    out = out.reshape(*out.shape[:2], -1)
+    out = out @ p["wo"].astype(dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(dtype)
+    out = constrain(out, ("batch", "seq", "embed"))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p, x, cache, cfg: ModelConfig, *, pos, window: int = 0,
+                     n_heads=None, n_kv=None, cross_kv=None):
+    """One-token decode. cache = {"k","v"}: (B, S_cache, KV, D); ``pos`` is
+    the absolute position (scalar int32).  For ``window>0`` the cache is a
+    rolling buffer of length ``window``.  ``cross_kv`` short-circuits to
+    cross-attention against precomputed encoder K/V."""
+    dtype = x.dtype
+    h = n_heads or cfg.n_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = cfg.head_dim
+    b = x.shape[0]
+    if cross_kv is not None:
+        q = (x @ p["wq"].astype(dtype)).reshape(b, 1, h, hd)
+        k, v = cross_kv
+        valid = None
+        new_cache = cache
+    else:
+        q, k_new, v_new = _project_qkv(p, x, cfg, h, kv, dtype)
+        posb = jnp.full((b, 1), pos, jnp.int32)
+        q = rope(q, posb, cfg.rope_theta)
+        k_new = rope(k_new, posb, cfg.rope_theta)
+        s_cache = cache["k"].shape[1]
+        slot = pos % window if window else pos
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, slot, 0, 0))
+        new_cache = {"k": k, "v": v}
+        idx = jnp.arange(s_cache)
+        if window:
+            valid = (idx <= pos % window) | (pos >= window)
+            valid = valid & (idx < window)
+        else:
+            valid = idx <= pos
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(dtype),
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    # flash-decoding split: the cache *sequence* lives on the model axis
+    # (GQA head counts rarely divide 16; seq_len always does)
+    scores = constrain(scores, ("batch", "kv_heads", None, "kv_seq"))
+    if valid is not None:
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(dtype), v.astype(dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    out = out.reshape(b, 1, h * hd)
+    out = out @ p["wo"].astype(dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d: int | None = None,
+             ff: int | None = None):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    ks = _split(key, 3)
+    if cfg.mlp_type == "gelu":
+        p = {"w_up": dense_init(ks[1], (d, ff)),
+             "w_down": dense_init(ks[2], (ff, d))}
+        if cfg.use_bias:
+            p["b_up"] = jnp.zeros((ff,), jnp.float32)
+            p["b_down"] = jnp.zeros((d,), jnp.float32)
+        return p
+    return {
+        "w_gate": dense_init(ks[0], (d, ff)),
+        "w_up": dense_init(ks[1], (d, ff)),
+        "w_down": dense_init(ks[2], (ff, d)),
+    }
+
+
+def mlp_forward(p, x):
+    dtype = x.dtype
+    if "w_gate" not in p:                       # gelu MLP (whisper)
+        h = x @ p["w_up"].astype(dtype)
+        if "b_up" in p:
+            h = h + p["b_up"].astype(dtype)
+        h = constrain(jax.nn.gelu(h), ("batch", "seq", "mlp"))
+        out = h @ p["w_down"].astype(dtype)
+        if "b_down" in p:
+            out = out + p["b_down"].astype(dtype)
+        return constrain(out, ("batch", "seq", "embed"))
+    gate = jax.nn.silu(x @ p["w_gate"].astype(dtype))
+    up = x @ p["w_up"].astype(dtype)
+    h = constrain(gate * up, ("batch", "seq", "mlp"))
+    return constrain(h @ p["w_down"].astype(dtype), ("batch", "seq", "embed"))
+
+
+def init_moe(key, cfg: ModelConfig):
+    ks = _split(key, 4)
+    e, d, ff = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": dense_init(ks[0], (d, e)),
+        "w_gate": dense_init(ks[1], (e, d, ff), in_axis=1),
+        "w_up": dense_init(ks[2], (e, d, ff), in_axis=1),
+        "w_down": dense_init(ks[3], (e, ff, d), in_axis=1),
+    }
+
+
+MOE_GROUP = 2048  # tokens per dispatch group (GShard-style local capacity)
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """GShard-style grouped top-k dispatch with capacity.
+
+    Tokens are dispatched within *groups* of <= MOE_GROUP tokens (per
+    sequence slice), so the one-hot dispatch/combine tensors are
+    (G_count, G, E, C_g) with C_g = ceil(G*k/E*cf) -- never the quadratic
+    (N, E, N*k/E) blow-up of a global dispatch.  Returns (out, aux_loss).
+    """
+    dtype = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if s >= MOE_GROUP and s % MOE_GROUP == 0:
+        g_count, g = b * (s // MOE_GROUP), MOE_GROUP
+    elif s == 1:
+        g_count, g = 1, b       # decode: one group across the batch
+    else:
+        g_count, g = b, s
+    xt = x.reshape(g_count, g, d)
+    logits = (xt @ p["router"].astype(dtype)).astype(jnp.float32)  # (B,G,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (B,G,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    cap = int(math.ceil(g * k / e * cfg.capacity_factor))
+    cap = max(cap, 4)
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)        # (B,G,k,E)
+    flat = onehot.reshape(g_count, g * k, e)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(g_count, g, k, e)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                      # (B,G,k)
+    keep = (pos < cap).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)           # (B,G,k,C)
+    disp = jnp.einsum("bgke,bgkc->bgec", onehot, pos_oh * keep[..., None])
+    comb = jnp.einsum("bgec,bgk->bgec", disp, gate_vals.astype(jnp.float32))
+    xe = jnp.einsum("bgd,bgec->becd", xt.astype(jnp.float32),
+                    disp).astype(dtype)                            # (B,E,C,D)
+    xe = constrain(xe, (None, "experts", "expert_capacity", "embed"))
+    gate = jax.nn.silu(jnp.einsum("becd,edf->becf", xe,
+                                  p["w_gate"].astype(dtype)))
+    up = jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(dtype))
+    ye = jnp.einsum("becf,efd->becd", gate * up, p["w_down"].astype(dtype))
+    ye = constrain(ye, (None, "experts", "expert_capacity", "embed"))
+    out = jnp.einsum("becd,bgec->bgd", ye.astype(jnp.float32),
+                     comb).astype(dtype)
+    # load-balancing auxiliary loss (Switch)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(onehot.sum(2), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return constrain(out.reshape(b, s, d), ("batch", "seq", "embed")), aux

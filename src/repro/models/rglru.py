@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> [linear -> GeLU gate] * [linear -> causal depthwise conv(4)
+-> RG-LRU] -> linear out.  The RG-LRU recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is a per-channel *linear* recurrence, so training/prefill uses the TPU-native
+log-depth ``jax.lax.associative_scan`` rather than a sequential loop; decode
+carries ``h`` explicitly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .config import ModelConfig
+from .layers import dense_init, _split
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = _split(key, 6)
+    return {
+        "w_gate_branch": dense_init(ks[0], (d, w)),
+        "w_rec_branch": dense_init(ks[1], (d, w)),
+        "conv_w": 0.1 * dense_init(ks[2], (cfg.conv_width, w)),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "wa": dense_init(ks[3], (w, w)),
+        "ba": jnp.full((w,), 2.0, jnp.float32),   # bias toward remembering
+        "wx": dense_init(ks[4], (w, w)),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.linspace(0.9, 4.0, w).astype(jnp.float32),  # Lambda
+        "w_out": dense_init(ks[5], (w, d)),
+    }
+
+
+def _gates(p, u, dtype):
+    r = jax.nn.sigmoid((u @ p["wa"].astype(dtype)).astype(jnp.float32)
+                       + p["ba"])
+    i = jax.nn.sigmoid((u @ p["wx"].astype(dtype)).astype(jnp.float32)
+                       + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (..., W) fp32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def _conv_train(p, u, dtype):
+    """Causal depthwise conv over time; u: (B, S, W)."""
+    width = p["conv_w"].shape[0]
+    pads = [jnp.pad(u, ((0, 0), (width - 1 - i, i), (0, 0)))[:, :u.shape[1]]
+            for i in range(width)]
+    # conv_w[i] multiplies the input delayed by (width-1-i)
+    out = sum(pads[i] * p["conv_w"][i].astype(dtype) for i in range(width))
+    return out + p["conv_b"].astype(dtype)
+
+
+def rglru_block_forward(p, x, cfg: ModelConfig, *, return_state: bool = False):
+    """Training / prefill path.  Returns (out, state) where state is the
+    decode carry {"h": (B, W) fp32, "conv": (B, conv_width-1, W)}."""
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate_branch"].astype(dtype))
+    u_raw = x @ p["w_rec_branch"].astype(dtype)
+    u_raw = constrain(u_raw, ("batch", "seq", "lru"))
+    u = _conv_train(p, u_raw, dtype)
+    a, b = _gates(p, u, dtype)                    # (B, S, W) fp32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = constrain(h.astype(dtype), ("batch", "seq", "lru"))
+    out = (gate * h) @ p["w_out"].astype(dtype)
+    out = constrain(out, ("batch", "seq", "embed"))
+    if not return_state:
+        return out, h[:, -1].astype(jnp.float32)
+    width = p["conv_w"].shape[0]
+    conv_tail = u_raw[:, -(width - 1):]
+    pad = (width - 1) - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_tail}
+
+
+def rglru_block_decode(p, x, state, cfg: ModelConfig):
+    """One-step decode.  x: (B, 1, D); state = {"h": (B, W),
+    "conv": (B, conv_width-1, W)} (previous conv inputs, oldest first)."""
+    dtype = x.dtype
+    b = x.shape[0]
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate_branch"].astype(dtype))
+    u_new = x[:, 0] @ p["w_rec_branch"].astype(dtype)            # (B, W)
+    width = p["conv_w"].shape[0]
+    hist = jnp.concatenate([state["conv"], u_new[:, None]], axis=1)
+    u = sum(hist[:, i] * p["conv_w"][i].astype(dtype) for i in range(width))
+    u = u + p["conv_b"].astype(dtype)
+    a, bterm = _gates(p, u, dtype)                               # (B, W)
+    h = a * state["h"] + bterm
+    out = (gate * h.astype(dtype)) @ p["w_out"].astype(dtype)
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return out[:, None], new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype)}

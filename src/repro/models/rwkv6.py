@@ -1,0 +1,219 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token/time mixing.
+
+Time-mix per head (head dim N = 64):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (matrix state, K x V)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with *data-dependent* per-channel decay w_t = exp(-exp(ww + lora(x_t))) and
+token-shift ddlerp mixing.  Training/prefill uses the chunked formulation
+(chunk = 16) so everything is MXU matmuls with safe fp32 exponents; decode
+carries (S, last_x) explicitly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .config import ModelConfig
+from .layers import dense_init, _split
+
+HEAD_N = 64          # RWKV-6 head size
+CHUNK = 16           # chunk length: exp arguments stay within fp32 range
+LOG_W_MIN = -2.5     # per-token decay clamp (w >= e^-2.5)
+LORA_R = 32
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % HEAD_N == 0
+    return cfg.d_model // HEAD_N
+
+
+def init_time_mix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = _split(key, 10)
+    p = {
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),     # r,k,v,w,g ddlerp base
+        "lora_a": 0.01 * dense_init(ks[0], (d, LORA_R * 5)),
+        "lora_b": 0.01 * dense_init(ks[1], (5, LORA_R, d), in_axis=1),
+        "wr": dense_init(ks[2], (d, d)),
+        "wk": dense_init(ks[3], (d, d)),
+        "wv": dense_init(ks[4], (d, d)),
+        "wg": dense_init(ks[5], (d, d)),
+        "wo": dense_init(ks[6], (d, d)),
+        "ww": jnp.full((d,), -0.6, jnp.float32),       # decay base
+        "w_lora_a": 0.01 * dense_init(ks[7], (d, LORA_R)),
+        "w_lora_b": 0.01 * dense_init(ks[8], (LORA_R, d)),
+        "u": 0.1 * dense_init(ks[9], (d,)),            # bonus
+        "ln_scale": jnp.ones((d,), jnp.float32),       # group-norm on heads
+    }
+    return p
+
+
+def init_channel_mix(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = _split(key, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mu_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "wk": dense_init(ks[0], (d, ff)),
+        "wv": dense_init(ks[1], (ff, d)),
+        "wr": dense_init(ks[2], (d, d)),
+    }
+
+
+def _ddlerp(p, x, x_prev, dtype):
+    """Data-dependent token-shift mixing -> the 5 mixed inputs (r,k,v,w,g)."""
+    xx = x_prev - x                                        # (B, S, D)
+    coarse = x + xx * p["mu"][:, None, None, :].astype(dtype)   # (5,B,S,D)
+    lora = jnp.tanh((x + 0.5 * xx) @ p["lora_a"].astype(dtype))
+    lora = lora.reshape(*x.shape[:-1], 5, LORA_R)
+    delta = jnp.einsum("bsfr,frd->fbsd", lora, p["lora_b"].astype(dtype))
+    return coarse + xx * delta
+
+
+def _decay(p, xw, dtype):
+    """Per-token per-channel log decay, clamped for chunked stability."""
+    lo = jnp.tanh(xw @ p["w_lora_a"].astype(dtype)) @ p["w_lora_b"].astype(dtype)
+    log_w = -jnp.exp((p["ww"] + lo.astype(jnp.float32)).clip(-8.0, 1.0))
+    return log_w.clip(LOG_W_MIN, -1e-4)                    # (B, S, D) fp32
+
+
+def _group_norm(p, o, h):
+    """Per-head LayerNorm on the flattened (H*N) output."""
+    of = o.astype(jnp.float32)
+    mean = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    of = (of - mean) * jax.lax.rsqrt(var + 64e-5)
+    of = of.reshape(*of.shape[:-2], h * HEAD_N) * p["ln_scale"]
+    return of
+
+
+def time_mix_forward(p, x, x_prev_last, cfg: ModelConfig):
+    """Chunked WKV6. x: (B, S, D) with S % CHUNK == 0.
+    Returns (out, (S_state, last_x))."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    h = n_heads(cfg)
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev, dtype)
+    r = (xr @ p["wr"].astype(dtype)).reshape(b, s, h, HEAD_N)
+    k = (xk @ p["wk"].astype(dtype)).reshape(b, s, h, HEAD_N)
+    v = (xv @ p["wv"].astype(dtype)).reshape(b, s, h, HEAD_N)
+    g = jax.nn.silu(xg @ p["wg"].astype(dtype))
+    log_w = _decay(p, xw, dtype).reshape(b, s, h, HEAD_N)
+    u = p["u"].reshape(h, HEAD_N)
+
+    s_main = (s // CHUNK) * CHUNK
+    tail = s - s_main
+
+    def chunkify(t, n):
+        t = t[:, :s_main] if n else t
+        return t.reshape(b, -1, CHUNK, h, HEAD_N).transpose(1, 0, 3, 2, 4)
+
+    nc = s_main // CHUNK
+    rc = chunkify(r, tail)
+    kc = chunkify(k, tail)
+    vc = chunkify(v, tail)
+    wc = chunkify(log_w, tail)
+
+    def chunk_step(S, inp):
+        rcb, kcb, vcb, wcb = inp          # (B, H, T, N) fp32/dtype
+        cum = jnp.cumsum(wcb, axis=2)     # inclusive logP_t
+        p_prev = jnp.exp(cum - wcb)       # logP_{t-1} = cum - w_t
+        p_inv = jnp.exp(-cum)
+        p_end = jnp.exp(cum[:, :, -1:])   # (B,H,1,N)
+        rcb32 = rcb.astype(jnp.float32)
+        kcb32 = kcb.astype(jnp.float32)
+        vcb32 = vcb.astype(jnp.float32)
+        # inter-chunk: r_t decayed against entering state
+        o_inter = jnp.einsum("bhtn,bhnm->bhtm", rcb32 * p_prev, S)
+        # intra-chunk: A[t,j] = (r_t p_{t-1}) . (k_j / p_j)  for j < t
+        A = jnp.einsum("bhtn,bhjn->bhtj", rcb32 * p_prev, kcb32 * p_inv,
+                       preferred_element_type=jnp.float32)
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), jnp.float32), k=-1)
+        A = A * tri
+        # bonus diagonal term: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bhtn,bhtn->bht", rcb32,
+                           u[None, :, None, :] * kcb32)
+        o = o_inter + jnp.einsum("bhtj,bhjm->bhtm", A, vcb32) \
+            + bonus[..., None] * vcb32
+        # state update: S' = diag(p_end) S + sum_j (p_end / p_j) k_j v_j
+        kd = kcb32 * (p_end * p_inv)
+        S_new = p_end.transpose(0, 1, 3, 2) * S + \
+            jnp.einsum("bhjn,bhjm->bhnm", kd, vcb32)
+        return S_new, o.astype(dtype)
+
+    S0 = jnp.zeros((b, h, HEAD_N, HEAD_N), jnp.float32)
+    if nc > 0:
+        # remat the chunk body: without it the scan saves every chunk's
+        # (B,H,T,T) A-matrix and decay tensors for backward (~10 GiB/device
+        # at train_4k; see EXPERIMENTS.md section Perf)
+        S_fin, oc = jax.lax.scan(jax.checkpoint(chunk_step), S0,
+                                 (rc, kc, vc, wc))
+        o = oc.transpose(1, 0, 3, 2, 4).reshape(b, s_main, h, HEAD_N)
+    else:
+        S_fin, o = S0, jnp.zeros((b, 0, h, HEAD_N), dtype)
+    if tail:
+        # sub-chunk remainder: plain per-token recurrence
+        def tok_step(S, inp):
+            rt, kt, vt, wt = (t.astype(jnp.float32) for t in inp)
+            kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+            ot = jnp.einsum("bhn,bhnm->bhm", rt,
+                            S + u[None, :, :, None] * kv)
+            S = jnp.exp(wt)[..., None] * S + kv
+            return S, ot.astype(dtype)
+
+        seqs = tuple(t[:, s_main:].transpose(1, 0, 2, 3)
+                     for t in (r, k, v, log_w))
+        S_fin, o_tail = jax.lax.scan(tok_step, S_fin, seqs)
+        o = jnp.concatenate([o, o_tail.transpose(1, 0, 2, 3)], axis=1)
+    o = _group_norm(p, o, h).astype(dtype) * g
+    out = o @ p["wo"].astype(dtype)
+    return constrain(out, ("batch", "seq", "embed")), (S_fin, x[:, -1])
+
+
+def time_mix_decode(p, x, state, cfg: ModelConfig):
+    """x: (B, 1, D); state = (S (B,H,N,N) fp32, last_x (B, D))."""
+    dtype = x.dtype
+    S, last_x = state
+    b, _, d = x.shape
+    h = n_heads(cfg)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, last_x[:, None], dtype)
+    r = (xr @ p["wr"].astype(dtype)).reshape(b, h, HEAD_N).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(dtype)).reshape(b, h, HEAD_N).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(dtype)).reshape(b, h, HEAD_N).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(dtype))[:, 0]
+    w = jnp.exp(_decay(p, xw, dtype).reshape(b, h, HEAD_N))
+    u = p["u"].reshape(h, HEAD_N)
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    o = jnp.einsum("bhn,bhnm->bhm", r, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    o = _group_norm(p, o, h)                       # (B, H*N)
+    out = (o.astype(dtype) * g) @ p["wo"].astype(dtype)
+    return out[:, None], (S_new, x[:, 0])
+
+
+def channel_mix_forward(p, x, x_prev_last, dtype=None):
+    dtype = dtype or x.dtype
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(dtype)
+    xr = x + xx * p["mu_r"].astype(dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dtype)))
+    kk = constrain(kk, ("batch", "seq", "mlp"))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dtype)) * (kk @ p["wv"].astype(dtype))
+    return constrain(out, ("batch", "seq", "embed")), x[:, -1]
+
+
+def channel_mix_decode(p, x, last_x):
+    dtype = x.dtype
+    xx = last_x[:, None] - x
+    xk = x + xx * p["mu_k"].astype(dtype)
+    xr = x + xx * p["mu_r"].astype(dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dtype)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dtype)) * (kk @ p["wv"].astype(dtype))
+    return out, x[:, 0]

@@ -1,0 +1,6 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import cosine_schedule
+from .grad_compression import compress_int8, decompress_int8
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "compress_int8", "decompress_int8"]

@@ -1,0 +1,89 @@
+"""AdamW in pure JAX pytrees (no optax dependency in this container).
+
+Moments are stored in fp32 and sharded exactly like their parameters (the
+sharding rules treat the optimizer state as two more copies of the param
+tree), which is what makes the ZeRO-style ``fsdp`` axis effective.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params, *, master: bool = False):
+    """``master=True`` keeps an fp32 master copy in the optimizer state
+    (used when the live params are bf16; ZeRO-1 shards mu/nu/master)."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / scalar gains."""
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    leaf = str(names[-1]) if names else ""
+    return not any(s in leaf for s in ("scale", "bias", "ln_", "lam", "ww",
+                                       "mu", "u"))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+    has_master = "master" in state
+    masters = state.get("master", params)
+
+    def upd(path, p, g, mu, nu, m):
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu2 = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        update = (mu2 / b1c) / (jnp.sqrt(nu2 / b2c) + cfg.eps)
+        src = m.astype(jnp.float32)
+        if _decay_mask(path):
+            update = update + cfg.weight_decay * src
+        m2 = src - lr * update
+        return m2.astype(p.dtype), mu2, nu2, m2
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, mu, nu, m: upd(path, p, g, mu, nu, m),
+        params, grads, state["mu"], state["nu"], masters)
+    is_tup = lambda t: isinstance(t, tuple)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=is_tup)
+    new_state = {
+        "mu": jax.tree.map(lambda t: t[1], flat, is_leaf=is_tup),
+        "nu": jax.tree.map(lambda t: t[2], flat, is_leaf=is_tup),
+        "step": step,
+    }
+    if has_master:
+        new_state["master"] = jax.tree.map(lambda t: t[3], flat,
+                                           is_leaf=is_tup)
+    return new_params, new_state, {"grad_norm": gnorm}

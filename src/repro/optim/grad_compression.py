@@ -1,0 +1,42 @@
+"""Int8 gradient compression with error feedback (distributed-optimization).
+
+For the cross-pod (DCN) gradient reduction the pod axis is slow; compressing
+gradients to int8 with per-tensor scales cuts DCN bytes 4x vs fp32 (2x vs
+bf16).  Error feedback accumulates the quantization residual locally so the
+compression bias vanishes over steps (Seide et al.; Karimireddy et al.).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array):
+    """Returns (q int8, scale f32). Symmetric per-tensor quantization."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree_with_feedback(grads, residuals):
+    """Quantize grads + residuals; returns (quantized, scales, new_residuals)."""
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = compress_int8(target)
+        deq = decompress_int8(q, s)
+        return q, s, target - deq
+
+    flat = jax.tree.map(one, grads, residuals)
+    q = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, r
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(decompress_int8, q, s)

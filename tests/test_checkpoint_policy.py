@@ -1,0 +1,56 @@
+"""Tests for the Lemma 3.1 dynamic checkpoint-interval model."""
+import numpy as np
+import pytest
+
+from repro.core import (CloudEnvironment, generate_workflow, heft_schedule,
+                        checkpoint_policy)
+from repro.core.failures import ENVIRONMENTS
+
+
+@pytest.fixture(scope="module")
+def sched():
+    wf = generate_workflow("montage", 100, seed=0)
+    env = CloudEnvironment(wf, 20, seed=1)
+    return heft_schedule(wf, env, 1)
+
+
+def test_model_tet_positive_and_finite(sched):
+    for envname in ("stable", "normal", "unstable"):
+        for lam in (5.0, 50.0, 500.0):
+            tet = checkpoint_policy.model_tet(
+                lam, sched, ENVIRONMENTS[envname], gamma=2.0)
+            assert np.isfinite(tet) and tet > 0
+
+
+def test_small_lambda_penalized_by_overhead(sched):
+    env = ENVIRONMENTS["stable"]
+    t_small = checkpoint_policy.model_tet(1.0, sched, env, gamma=2.0)
+    t_large = checkpoint_policy.model_tet(500.0, sched, env, gamma=2.0)
+    # in a stable environment Term2 dominates: tiny lambda is bad (Lemma 3.1)
+    assert t_small > t_large
+
+
+def test_optimal_lambda_decreases_with_instability(sched):
+    lams = {e: checkpoint_policy.optimal_lambda(
+        sched, ENVIRONMENTS[e], gamma=2.0) for e in
+        ("stable", "normal", "unstable")}
+    assert lams["unstable"] <= lams["normal"] <= lams["stable"]
+    assert lams["unstable"] < lams["stable"]  # strictly environment-dependent
+
+
+def test_optimal_lambda_increases_with_gamma(sched):
+    env = ENVIRONMENTS["unstable"]
+    lam_cheap = checkpoint_policy.optimal_lambda(sched, env, gamma=0.5)
+    lam_costly = checkpoint_policy.optimal_lambda(sched, env, gamma=8.0)
+    assert lam_costly >= lam_cheap
+
+
+def test_model_is_quasiconvex_on_grid(sched):
+    env = ENVIRONMENTS["unstable"]
+    grid = np.geomspace(2.0, 600.0, 25)
+    vals = [checkpoint_policy.model_tet(l, sched, env, gamma=2.0)
+            for l in grid]
+    i_min = int(np.argmin(vals))
+    # decreasing to the left of the argmin, increasing to the right
+    assert all(vals[i] >= vals[i + 1] - 1e-9 for i in range(i_min))
+    assert all(vals[i] <= vals[i + 1] + 1e-9 for i in range(i_min, len(vals) - 1))

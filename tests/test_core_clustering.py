@@ -1,0 +1,105 @@
+"""Unit + property tests for the triplet agglomerative clustering."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pairwise_distances, replication_counts, triplet_agglomerate
+from repro.kernels.pairwise_affinity import ref as pa_ref
+
+
+def _blobs(rng, centers, n_per, dim=4, spread=0.1):
+    pts = []
+    for c in centers:
+        pts.append(rng.normal(scale=spread, size=(n_per, dim)) + np.asarray(c))
+    return np.concatenate(pts)
+
+
+def test_recovers_well_separated_blobs():
+    rng = np.random.default_rng(0)
+    centers = [np.zeros(4), np.full(4, 10.0), np.full(4, -10.0)]
+    pts = _blobs(rng, centers, 20)
+    res = triplet_agglomerate(pts, n_clusters=3, R=3, lam=0.5)
+    labels = res.labels
+    # each blob is pure: all 20 points of a blob share one label
+    for b in range(3):
+        blob_labels = labels[b * 20:(b + 1) * 20]
+        assert len(set(blob_labels.tolist())) == 1
+    assert sorted(res.cluster_sizes) == [20, 20, 20]
+
+
+def test_replication_counts_by_size_rank():
+    rng = np.random.default_rng(1)
+    pts = np.concatenate([
+        rng.normal(scale=0.1, size=(30, 3)),
+        rng.normal(scale=0.1, size=(10, 3)) + 8.0,
+        rng.normal(scale=0.1, size=(4, 3)) - 8.0,
+    ])
+    res = triplet_agglomerate(pts, n_clusters=3)
+    counts = replication_counts(res)
+    # biggest cluster -> 1 copy, middle -> 2, outliers -> 3
+    assert counts[:30].tolist() == [1] * 30
+    assert counts[30:40].tolist() == [2] * 10
+    assert counts[40:].tolist() == [3] * 4
+
+
+def test_rule_guard_caps_lowly_outliers():
+    rng = np.random.default_rng(2)
+    pts = np.concatenate([
+        rng.normal(scale=0.1, size=(30, 3)),
+        rng.normal(scale=0.1, size=(3, 3)) + 9.0,
+        rng.normal(scale=0.1, size=(2, 3)) - 9.0,
+    ])
+    res = triplet_agglomerate(pts, n_clusters=3)
+    pri = np.zeros(35)
+    ext = np.zeros(35)
+    counts = replication_counts(res, rule_guard=True, priorities=pri,
+                                exec_times=ext)
+    assert counts.max() <= 2
+
+
+def test_dendrogram_threshold_stops_early():
+    rng = np.random.default_rng(3)
+    pts = np.concatenate([
+        rng.normal(scale=0.05, size=(10, 2)),
+        rng.normal(scale=0.05, size=(10, 2)) + 100.0,
+    ])
+    res = triplet_agglomerate(pts, n_clusters=1, dendro_threshold=10.0)
+    # refuses to merge the two distant blobs into one supercluster
+    assert len(res.cluster_sizes) == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(4, 24),
+    dim=st.integers(1, 6),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_property_cluster_invariants(n, dim, k, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, dim))
+    res = triplet_agglomerate(pts, n_clusters=k)
+    assert sum(res.cluster_sizes) == n
+    assert len(res.cluster_sizes) == min(k, n)
+    assert res.labels.min() >= 0 and res.labels.max() < min(k, n)
+    counts = replication_counts(res)
+    assert counts.min() >= 1 and counts.max() <= min(k, n)
+    # counts are anti-monotone in cluster size rank
+    sizes = np.asarray(res.cluster_sizes)
+    for c1 in range(len(sizes)):
+        for c2 in range(len(sizes)):
+            if sizes[c1] > sizes[c2]:
+                t1 = np.where(res.labels == c1)[0][0]
+                t2 = np.where(res.labels == c2)[0][0]
+                assert counts[t1] <= counts[t2]
+
+
+def test_pairwise_distance_ref_matches_numpy():
+    rng = np.random.default_rng(4)
+    pts = rng.normal(size=(37, 5)).astype(np.float32)
+    d_ref = np.asarray(pa_ref.pairwise_distance(pts))
+    d_np = np.linalg.norm(pts[:, None] - pts[None, :], axis=-1)
+    # fp32 gram-expansion rounding puts ~sqrt(eps) noise on near-zero cells
+    np.testing.assert_allclose(d_ref, d_np, atol=3e-3)
+    d_core = pairwise_distances(pts)
+    np.testing.assert_allclose(d_core, d_np, atol=3e-3)

@@ -1,0 +1,176 @@
+"""Unit + property tests: HEFT schedules and the CheckpointHEFT runtime."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CRCHConfig, CloudEnvironment, SimConfig, CkptLevel,
+                        baselines, generate_workflow, heft_schedule,
+                        metrics_from_result, plan, sample_failure_trace,
+                        sim_config, simulate)
+from repro.core.failures import ENVIRONMENTS, FailureTrace
+
+
+def _setup(kind="montage", n=100, seed=0):
+    wf = generate_workflow(kind, n, seed=seed)
+    env = CloudEnvironment(wf, 20, seed=seed + 1)
+    return wf, env
+
+
+# ---------------------------------------------------------------------------
+# HEFT schedule validity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["montage", "ligo", "cybershake", "sipht"])
+def test_heft_schedule_valid(kind):
+    wf, env = _setup(kind)
+    sched = heft_schedule(wf, env, 1)
+    placements = {p.task: p for p in sched.placements}
+    assert len(placements) == wf.n_tasks
+    # dependencies respected (incl. transfer times)
+    for child, parent, d in wf.deps:
+        pc, pp = placements[child], placements[parent]
+        assert pc.est >= pp.eft + env.transfer_time(d, pp.vm, pc.vm) - 1e-6
+    # no overlapping intervals on any VM
+    for vm, plist in sched.by_vm.items():
+        for a, b in zip(plist, plist[1:]):
+            assert b.est >= a.eft - 1e-9
+    # durations match the runtime matrix
+    for p in sched.placements:
+        assert p.duration == pytest.approx(env.time_on_vm[p.task, p.vm])
+
+
+def test_replicas_on_distinct_vms_and_after_original():
+    wf, env = _setup("montage")
+    counts = np.full(wf.n_tasks, 3)
+    sched = heft_schedule(wf, env, counts)
+    for t in range(wf.n_tasks):
+        copies = sched.by_task[t]
+        assert len(copies) == 3
+        assert len({p.vm for p in copies}) == 3
+        orig = copies[0]
+        for rep in copies[1:]:
+            assert rep.est >= orig.eft  # standby slots after the original
+
+
+def test_critical_path_valid():
+    wf, env = _setup("ligo")
+    sched = heft_schedule(wf, env, 1)
+    cp = sched.critical_path()
+    assert cp[0] in wf.entry_tasks()
+    assert sched.original(cp[-1]).eft == pytest.approx(sched.makespan)
+    for a, b in zip(cp, cp[1:]):
+        assert a in [p for p, _ in wf.parents[b]]
+
+
+# ---------------------------------------------------------------------------
+# Runtime semantics
+# ---------------------------------------------------------------------------
+def _no_failure_trace(n_vms=20):
+    return FailureTrace(env=ENVIRONMENTS["stable"], n_vms=n_vms,
+                        failing_vms=[], downtime={})
+
+
+def test_no_failures_matches_schedule():
+    wf, env = _setup("montage")
+    sched = heft_schedule(wf, env, 1)
+    res = simulate(sched, _no_failure_trace(), baselines.heft_sim_config())
+    assert res.completed
+    assert res.n_failures == 0 and res.n_resubmissions == 0
+    assert res.wastage == 0.0
+    # work-conserving runtime can only beat the (insertion-based) plan
+    assert res.tet <= sched.makespan * 1.05
+    total_work = sum(p.duration for p in sched.placements)
+    assert res.usage == pytest.approx(total_work, rel=1e-6)
+
+
+def test_heft_fails_without_fault_tolerance():
+    wf, env = _setup("montage")
+    sched = heft_schedule(wf, env, 1)
+    failed = completed = 0
+    for seed in range(12):
+        tr = sample_failure_trace("unstable", 20, horizon_s=40_000, seed=seed)
+        res = simulate(sched, tr, baselines.heft_sim_config())
+        failed += (not res.completed)
+        completed += res.completed
+        if not res.completed:
+            assert res.wastage == pytest.approx(res.usage)  # all futile
+    assert failed > 0  # the paper: HEFT cannot survive unstable environments
+
+
+def test_crch_completes_under_unstable_failures():
+    wf, env = _setup("montage")
+    cfg = CRCHConfig()
+    p = plan(wf, env, cfg, environment="unstable")
+    for seed in range(8):
+        tr = sample_failure_trace("unstable", 20, horizon_s=200_000,
+                                  seed=seed)
+        res = simulate(p.schedule, tr, sim_config(p, cfg))
+        assert res.completed, f"CRCH failed on trace seed {seed}"
+
+
+def test_checkpoint_overhead_accounting():
+    wf, env = _setup("montage")
+    sched = heft_schedule(wf, env, 1)
+    lam, gamma = 50.0, 5.0
+    cfg = SimConfig(ckpt_levels=(CkptLevel(lam, gamma),), resubmit=True,
+                    busy_terminate=False)
+    res = simulate(sched, _no_failure_trace(), cfg)
+    base = simulate(sched, _no_failure_trace(), baselines.heft_sim_config())
+    assert res.usage == pytest.approx(base.usage * (1 + gamma / lam), rel=1e-6)
+    assert res.ckpt_overhead == pytest.approx(res.usage - base.usage, rel=1e-6)
+
+
+def test_checkpoints_reduce_waste_on_failures():
+    wf, env = _setup("ligo")
+    sched = heft_schedule(wf, env, 1)
+    waste_with, waste_without = [], []
+    for seed in range(6):
+        tr = sample_failure_trace("unstable", 20, horizon_s=200_000,
+                                  seed=seed)
+        with_ck = simulate(sched, tr, baselines.crch_ckpt_only_sim_config(
+            lam=30.0, gamma=0.5))
+        no_ck = simulate(sched, tr, SimConfig(ckpt_levels=(), resubmit=True,
+                                              busy_terminate=False))
+        if with_ck.completed and no_ck.completed:
+            waste_with.append(with_ck.wastage)
+            waste_without.append(no_ck.wastage)
+    assert waste_with, "no comparable runs"
+    assert np.mean(waste_with) <= np.mean(waste_without) + 1e-6
+
+
+def test_replicate_all_usage_exceeds_crch_exceeds_heft():
+    wf, env = _setup("montage")
+    cfg = CRCHConfig()
+    p = plan(wf, env, cfg, environment="normal")
+    sh = baselines.heft_plan(wf, env)
+    sr = baselines.replicate_all_plan(wf, env, 3)
+    u = {"crch": [], "heft": [], "ra3": []}
+    for seed in range(6):
+        tr = sample_failure_trace("normal", 20, horizon_s=200_000, seed=seed)
+        u["crch"].append(simulate(p.schedule, tr, sim_config(p, cfg)).usage)
+        u["heft"].append(simulate(sh, tr, baselines.heft_sim_config()).usage)
+        u["ra3"].append(simulate(sr, tr,
+                                 baselines.replicate_all_sim_config()).usage)
+    assert np.mean(u["ra3"]) > np.mean(u["crch"]) >= 0.95 * np.mean(u["heft"])
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(kind=st.sampled_from(["montage", "sipht"]),
+       envname=st.sampled_from(["stable", "normal", "unstable"]),
+       seed=st.integers(0, 1000))
+def test_property_simulation_invariants(kind, envname, seed):
+    wf, env = _setup(kind, 100, seed=seed % 5)
+    cfg = CRCHConfig()
+    p = plan(wf, env, cfg, environment=envname)
+    tr = sample_failure_trace(envname, 20, horizon_s=300_000, seed=seed)
+    res = simulate(p.schedule, tr, sim_config(p, cfg))
+    assert res.completed
+    assert res.usage >= 0 and res.wastage >= 0
+    assert res.wastage <= res.usage + 1e-6
+    assert res.tet >= max(p.schedule.original(t).duration
+                          for t in range(wf.n_tasks)) - 1e-6
+    # completion order respects the DAG
+    for child, parent, _ in wf.deps:
+        assert res.task_complete[parent] <= res.task_complete[child] + 1e-6

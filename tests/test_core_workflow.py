@@ -1,0 +1,66 @@
+"""Unit tests: workflow DAGs, environments, features, PCA."""
+import numpy as np
+import pytest
+
+from repro.core import (CloudEnvironment, FEATURE_NAMES, Task, Workflow,
+                        WORKFLOW_TYPES, b_levels, fit_pca, generate_workflow,
+                        task_features)
+
+
+@pytest.mark.parametrize("kind", WORKFLOW_TYPES)
+@pytest.mark.parametrize("n", [100, 300])
+def test_generators_produce_valid_dags(kind, n):
+    wf = generate_workflow(kind, n, seed=0)
+    assert 0.5 * n <= wf.n_tasks <= 1.5 * n
+    order = wf.topo_order()           # raises on cycles
+    assert len(order) == wf.n_tasks
+    pos = {t: i for i, t in enumerate(order)}
+    for child, parent, d in wf.deps:
+        assert pos[parent] < pos[child]
+        assert d > 0
+    assert wf.entry_tasks() and wf.exit_tasks()
+
+
+def test_workflow_rejects_cycles():
+    tasks = [Task(0, "a", 1.0), Task(1, "b", 1.0)]
+    with pytest.raises(ValueError):
+        Workflow("cyc", tasks, [(0, 1, 1.0), (1, 0, 1.0)])
+
+
+def test_environment_matrices():
+    wf = generate_workflow("montage", 100, seed=0)
+    env = CloudEnvironment(wf, 20, seed=1)
+    assert env.time_on_vm.shape == (wf.n_tasks, 20)
+    assert (env.time_on_vm > 0).all()
+    # transfer matrix symmetric with inf diagonal (dedicated 2-way lines)
+    assert np.isinf(np.diag(env.transfer_rate)).all()
+    off = ~np.eye(20, dtype=bool)
+    assert np.allclose(env.transfer_rate[off], env.transfer_rate.T[off])
+    assert env.transfer_time(10.0, 3, 3) == 0.0
+    assert env.transfer_time(10.0, 3, 4) > 0.0
+
+
+def test_features_shape_and_blevel_monotonicity():
+    wf = generate_workflow("ligo", 100, seed=0)
+    env = CloudEnvironment(wf, 20, seed=1)
+    feats = task_features(wf, env)
+    assert feats.shape == (wf.n_tasks, len(FEATURE_NAMES))
+    assert np.isfinite(feats).all()
+    # B-level of a parent strictly exceeds each of its children's
+    bl = b_levels(wf, env)
+    for child, parent, _ in wf.deps:
+        assert bl[parent] > bl[child]
+
+
+def test_pca_components_orthonormal_and_cov_reached():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(100, 10)) * np.array([5, 3, 1] + [0.1] * 7)
+    res = fit_pca(x, threshold=0.8)
+    k = res.components.shape[0]
+    gram = res.components @ res.components.T
+    np.testing.assert_allclose(gram, np.eye(k), atol=1e-4)
+    assert res.cov >= 0.8 or k == 10
+    assert res.projected.shape == (100, k)
+    # higher threshold keeps at least as many components
+    res2 = fit_pca(x, threshold=0.95)
+    assert res2.components.shape[0] >= k

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.pairwise_affinity import ops as pa_ops, ref as pa_ref
+from repro.kernels.rglru_scan import ops as lru_ops, ref as lru_ref
+from repro.kernels.rwkv6_scan import ops as wk_ops, ref as wk_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# pairwise affinity (the paper's clustering hot spot)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,f", [(16, 4), (100, 10), (130, 3), (256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_pairwise_affinity(n, f, dtype):
+    pts = jnp.asarray(RNG.normal(size=(n, f)), dtype)
+    got = pa_ops.pairwise_distance(pts, interpret=True)
+    want = pa_ref.pairwise_distance(pts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 4, 2, 128, 128), (2, 8, 8, 256, 128), (1, 2, 1, 130, 128),
+    (1, 4, 2, 384, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, kv, s, d, dtype, causal):
+    if not causal and s % 128:
+        pytest.skip("non-causal requires pre-padded inputs")
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, kv, s, d)), dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = fa_ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,w", [(2, 128, 128), (3, 100, 96), (8, 256, 256),
+                                   (1, 17, 130)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(b, s, w, dtype):
+    a = jnp.asarray(RNG.uniform(0.8, 0.999, (b, s, w)), dtype)
+    x = jnp.asarray(0.1 * RNG.normal(size=(b, s, w)), dtype)
+    got = lru_ops.lru_scan(a, x, interpret=True)
+    want, _ = lru_ref.lru_scan(a, x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# WKV6 chunked scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,t,n", [(1, 2, 32, 64), (2, 3, 48, 64),
+                                     (1, 1, 20, 64), (1, 2, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_scan(b, h, t, n, dtype):
+    r = jnp.asarray(0.5 * RNG.normal(size=(b, h, t, n)), dtype)
+    k = jnp.asarray(0.5 * RNG.normal(size=(b, h, t, n)), dtype)
+    v = jnp.asarray(0.5 * RNG.normal(size=(b, h, t, n)), dtype)
+    lw = jnp.asarray(-RNG.uniform(0.01, 2.5, (b, h, t, n)), jnp.float32)
+    u = jnp.asarray(0.2 * RNG.normal(size=(h, n)), jnp.float32)
+    got = wk_ops.wkv6(r, k, v, lw, u, interpret=True)
+    want, _ = wk_ref.wkv6(r, k, v, lw, u)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=5e-2 if dtype == jnp.bfloat16 else 2e-4, rtol=5e-2)
+
+
+def test_wkv6_kernel_matches_model_chunked_path():
+    """The Pallas kernel and the model's jnp chunked path agree."""
+    from repro.models import rwkv6 as rw
+    b, h, t, n = 1, 2, 48, 64
+    r = jnp.asarray(0.3 * RNG.normal(size=(b, h, t, n)), jnp.float32)
+    k = jnp.asarray(0.3 * RNG.normal(size=(b, h, t, n)), jnp.float32)
+    v = jnp.asarray(0.3 * RNG.normal(size=(b, h, t, n)), jnp.float32)
+    lw = jnp.asarray(-RNG.uniform(0.01, 2.5, (b, h, t, n)), jnp.float32)
+    u = jnp.asarray(0.1 * RNG.normal(size=(h, n)), jnp.float32)
+    got = wk_ops.wkv6(r, k, v, lw, u, interpret=True)
+    want, _ = wk_ref.wkv6(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4,
+                               rtol=1e-3)
