@@ -59,6 +59,13 @@ def metrics_from_result(schedule: Schedule, res: SimResult) -> RunMetrics:
 
 def aggregate(runs: list[RunMetrics]) -> dict[str, float]:
     """Average metrics over repeated executions (paper: 10 runs per DAX)."""
+    if not runs:
+        # np.mean([]) raises a RuntimeWarning and yields nan; make the
+        # empty aggregate explicit instead.
+        keys = ("usage", "usage_frac", "wastage", "wastage_frac",
+                "ckpt_overhead", "resubmissions", "tet", "slr")
+        return {"n_runs": 0.0, "success_rate": 0.0,
+                **{k: float("nan") for k in keys}}
     ok = [r for r in runs if r.completed]
     out = {
         "n_runs": float(len(runs)),

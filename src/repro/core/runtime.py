@@ -39,6 +39,14 @@ class CkptLevel:
     gamma: float            # overhead per checkpoint (seconds)
     portable: bool = False  # restorable on a different VM (SCR PFS level)
 
+    def __post_init__(self) -> None:
+        if not self.lam > 0.0:
+            raise ValueError(
+                f"checkpoint interval lam must be > 0, got {self.lam!r}")
+        if self.gamma < 0.0:
+            raise ValueError(
+                f"checkpoint overhead gamma must be >= 0, got {self.gamma!r}")
+
 
 @dataclasses.dataclass
 class SimConfig:

@@ -71,7 +71,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None, *,
 
 def make_serve_step(cfg: ModelConfig):
     """One greedy decode step: (params, cache, tokens (B,1), pos) ->
-    (next_tokens (B,1), logits fp32, cache)."""
+    (next_tokens (B,1), logits fp32, cache).  ``pos`` may be a scalar
+    (static batch, all rows at the same position) or a (B,) vector
+    (continuous batching, per-slot positions)."""
 
     def serve_step(params, cache, tokens, pos):
         logits, cache = lm.decode_step(params, cfg, cache, tokens, pos)
@@ -82,7 +84,17 @@ def make_serve_step(cfg: ModelConfig):
 
 
 def make_prefill_step(cfg: ModelConfig, cache_len: int, *,
-                      q_chunk: int = 1024):
+                      q_chunk: int = 1024, with_last_idx: bool = False):
+    """``with_last_idx=True`` returns ``prefill_step(params, batch,
+    last_idx)`` where ``last_idx`` (B,) picks each row's true last prompt
+    position (bucket-padded prompts, see ``lm.prefill``)."""
+    if with_last_idx:
+        def prefill_last_idx_step(params, batch, last_idx):
+            return lm.prefill(params, cfg, batch, cache_len, q_chunk=q_chunk,
+                              last_idx=last_idx)
+
+        return prefill_last_idx_step
+
     def prefill_step(params, batch):
         return lm.prefill(params, cfg, batch, cache_len, q_chunk=q_chunk)
 

@@ -1,11 +1,19 @@
-"""Production serving launcher: prefill + batched greedy decode.
+"""Production serving launcher: fault-tolerant continuous batching.
+
+Requests are admitted through ``repro.serve``: freed decode slots prefill
+new requests while live requests keep decoding; replication follows the
+selected policy (``none`` / ``all-k`` / ``crch``) and failed workers resume
+requests from their last decode snapshot.  Architectures whose caches do
+not compose with continuous batching (RWKV, RG-LRU hybrids, enc-dec,
+multimodal) fall back to the legacy one-shot static batch.
 
 On TPU this runs under the production mesh with the ZeRO-1/TP weight layout
 and the sequence-sharded KV cache; on CPU, ``--tiny`` validates the same
 code end-to-end.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --tiny \
-        --batch 4 --prompt-len 32 --new-tokens 16
+        --requests 8 --prompt-len 32 --new-tokens 16 --policy crch \
+        --env normal
 """
 from __future__ import annotations
 
@@ -23,35 +31,88 @@ from repro.distributed.steps import make_prefill_step, make_serve_step
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.shapes import make_batch
 from repro.models import lm
+from repro.serve import (EngineConfig, Request, ServeEngine, WorkerPool,
+                         crch_policy, engine_supported, prompt_bucket,
+                         uniform_policy)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--mesh", choices=("debug", "single", "multi"),
-                    default="debug")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _sharded_params(cfg, mesh, seed: int):
+    params = lm.init_params(jax.random.key(seed), cfg)
+    abstract = jax.eval_shape(lambda: params)
+    psh = pshard.param_shardings(abstract, mesh, zero1=True)
+    return jax.device_put(params, psh)
 
-    cfg = get_config(args.arch, tiny=args.tiny)
-    mesh = (make_debug_mesh() if args.mesh == "debug" else
-            make_production_mesh(multi_pod=(args.mesh == "multi")))
-    cache_len = args.prompt_len + args.new_tokens + (cfg.n_image_tokens or 0)
 
+def _make_requests(cfg, n: int, prompt_len: int, new_tokens: int,
+                   seed: int) -> list[Request]:
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(prompt_len // 2, 4), prompt_len + 1))
+        newt = new_tokens if i % 3 else new_tokens * 2
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(1, cfg.vocab_size, plen,
+                                       dtype=np.int64).astype(np.int32),
+            max_new_tokens=newt, arrival=0,
+            deadline=16 * (plen + newt)))
+    return reqs
+
+
+def continuous_main(cfg, mesh, args) -> None:
+    reqs = _make_requests(cfg, args.requests, args.prompt_len,
+                          args.new_tokens, args.seed)
+    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+                    for r in reqs)
+    if args.policy == "crch":
+        policy = crch_policy(reqs)
+    elif args.policy == "all":
+        policy = uniform_policy(args.max_rep)
+    else:
+        policy = uniform_policy(1)
+    pool = WorkerPool(args.workers, args.slots_per_worker,
+                      environment=(args.env if args.env != "none" else None),
+                      seed=args.seed)
     with use_rules(mesh):
-        params = lm.init_params(jax.random.key(args.seed), cfg)
-        abstract = jax.eval_shape(lambda: params)
-        psh = pshard.param_shardings(abstract, mesh, zero1=True)
-        params = jax.device_put(params, psh)
+        params = _sharded_params(cfg, mesh, args.seed)
+        engine = ServeEngine(
+            cfg, EngineConfig(cache_len=cache_len, q_chunk=64),
+            pool=pool, policy=policy, params=params)
+        for r in reqs:
+            engine.submit(r)
+        t0 = time.time()
+        metrics = engine.run(max_steps=args.max_steps)
+        wall = time.time() - t0
+    s = metrics.summary(engine.step_no)
+    tok_s = metrics.decode_tokens / max(wall, 1e-9)
+    print(f"arch={cfg.name} ({cfg.param_count() / 1e6:.0f}M params) "
+          f"requests={args.requests} slots={pool.n_slots} "
+          f"policy={policy.name} env={args.env} mesh={args.mesh}")
+    print(f"{engine.step_no} engine steps in {wall:.2f}s "
+          f"({tok_s:.1f} tok/s aggregate) | completed "
+          f"{int(s['completed'])}/{args.requests} "
+          f"(in-deadline {int(s['in_deadline'])}) | "
+          f"p50/p99 latency {s['p50_latency']:.0f}/{s['p99_latency']:.0f} "
+          f"steps")
+    print(f"usage {s['usage_tokens']:.0f} tok | wasted "
+          f"{s['wasted_tokens']:.0f} tok ({100 * s['wastage_frac']:.1f}%) | "
+          f"failures {int(s['failures'])} resubmissions "
+          f"{int(s['resubmissions'])} snapshot-restores "
+          f"{int(s['restores'])}")
+    done = sorted(engine.completed)
+    assert done, "no requests completed"
+    print("sample:", engine.completed[done[0]][:12])
+
+
+def static_main(cfg, mesh, args) -> None:
+    """Legacy one-shot static batch (non-KV-cache-friendly families)."""
+    cache_len = args.prompt_len + args.new_tokens + (cfg.n_image_tokens or 0)
+    with use_rules(mesh):
+        params = _sharded_params(cfg, mesh, args.seed)
         prefill = jax.jit(make_prefill_step(
             cfg, cache_len, q_chunk=min(1024, args.prompt_len)))
         serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
-        batch = make_batch(cfg, batch=args.batch, seq=args.prompt_len,
+        batch = make_batch(cfg, batch=args.requests, seq=args.prompt_len,
                            seed=args.seed)
         prompts = {k: v for k, v in batch.items()
                    if k in ("tokens", "frames", "image_embeds")}
@@ -72,15 +133,50 @@ def main() -> None:
         t_decode = time.time() - t0
 
     gen = np.concatenate(out, axis=1)
-    tok_s = args.batch * (args.new_tokens - 1) / max(t_decode, 1e-9)
+    tok_s = args.requests * (args.new_tokens - 1) / max(t_decode, 1e-9)
     print(f"arch={cfg.name} ({cfg.param_count() / 1e6:.0f}M params) "
-          f"batch={args.batch} prompt={args.prompt_len} "
-          f"new={args.new_tokens} mesh={args.mesh}")
+          f"batch={args.requests} prompt={args.prompt_len} "
+          f"new={args.new_tokens} mesh={args.mesh} [static]")
     print(f"prefill {t_prefill * 1e3:.0f} ms | decode "
           f"{t_decode * 1e3 / max(args.new_tokens - 1, 1):.1f} ms/token "
           f"({tok_s:.1f} tok/s aggregate)")
     assert np.isfinite(np.asarray(logits)).all()
     print("sample:", gen[0][:12].tolist())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--requests", "--batch", type=int, default=4,
+                    dest="requests")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--slots-per-worker", type=int, default=2)
+    ap.add_argument("--policy", choices=("none", "all", "crch"),
+                    default="crch")
+    ap.add_argument("--max-rep", type=int, default=3)
+    ap.add_argument("--env", choices=("none", "stable", "normal", "unstable"),
+                    default="none")
+    ap.add_argument("--max-steps", type=int, default=20_000)
+    ap.add_argument("--static", action="store_true",
+                    help="force the legacy one-shot static batch")
+    ap.add_argument("--mesh", choices=("debug", "single", "multi"),
+                    default="debug")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny)
+    mesh = (make_debug_mesh() if args.mesh == "debug" else
+            make_production_mesh(multi_pod=(args.mesh == "multi")))
+    supported, why = engine_supported(cfg)
+    if args.static or not supported:
+        if not args.static:
+            print(f"[static fallback] {why}")
+        static_main(cfg, mesh, args)
+    else:
+        continuous_main(cfg, mesh, args)
 
 
 if __name__ == "__main__":

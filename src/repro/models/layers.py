@@ -220,9 +220,11 @@ def attention_forward(p, x, cfg: ModelConfig, *, positions, mode: str,
 def attention_decode(p, x, cache, cfg: ModelConfig, *, pos, window: int = 0,
                      n_heads=None, n_kv=None, cross_kv=None):
     """One-token decode. cache = {"k","v"}: (B, S_cache, KV, D); ``pos`` is
-    the absolute position (scalar int32).  For ``window>0`` the cache is a
-    rolling buffer of length ``window``.  ``cross_kv`` short-circuits to
-    cross-attention against precomputed encoder K/V."""
+    the absolute position, either a scalar int32 shared by the batch or a
+    per-row (B,) vector (continuous batching: every slot decodes at its own
+    position).  For ``window>0`` the cache is a rolling buffer of length
+    ``window``.  ``cross_kv`` short-circuits to cross-attention against
+    precomputed encoder K/V."""
     dtype = x.dtype
     h = n_heads or cfg.n_heads
     kv = n_kv or cfg.n_kv_heads
@@ -235,22 +237,41 @@ def attention_decode(p, x, cache, cfg: ModelConfig, *, pos, window: int = 0,
         new_cache = cache
     else:
         q, k_new, v_new = _project_qkv(p, x, cfg, h, kv, dtype)
-        posb = jnp.full((b, 1), pos, jnp.int32)
+        per_row = jnp.ndim(pos) > 0
+        posb = (jnp.reshape(pos, (b, 1)).astype(jnp.int32) if per_row
+                else jnp.full((b, 1), pos, jnp.int32))
         q = rope(q, posb, cfg.rope_theta)
         k_new = rope(k_new, posb, cfg.rope_theta)
         s_cache = cache["k"].shape[1]
-        slot = pos % window if window else pos
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                         (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                         (0, slot, 0, 0))
-        new_cache = {"k": k, "v": v}
         idx = jnp.arange(s_cache)
-        if window:
-            valid = (idx <= pos % window) | (pos >= window)
-            valid = valid & (idx < window)
+        if per_row:
+            slot = posb[:, 0] % window if window else posb[:, 0]
+
+            def upd(c, u, s):
+                return jax.lax.dynamic_update_slice(c, u.astype(c.dtype),
+                                                    (s, 0, 0))
+
+            k = jax.vmap(upd)(cache["k"], k_new, slot)
+            v = jax.vmap(upd)(cache["v"], v_new, slot)
+            if window:
+                valid = (idx[None] <= posb % window) | (posb >= window)
+                valid = valid & (idx[None] < window)
+            else:
+                valid = idx[None] <= posb                    # (B, S_cache)
+            valid = valid[:, None, None, :]
         else:
-            valid = idx <= pos
+            slot = pos % window if window else pos
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+            if window:
+                valid = (idx <= pos % window) | (pos >= window)
+                valid = valid & (idx < window)
+            else:
+                valid = idx <= pos
+            valid = valid[None, None, None]
+        new_cache = {"k": k, "v": v}
     g = h // kv
     qg = q.reshape(b, kv, g, hd)
     scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(dtype),
@@ -260,7 +281,7 @@ def attention_decode(p, x, cache, cfg: ModelConfig, *, pos, window: int = 0,
     # (GQA head counts rarely divide 16; seq_len always does)
     scores = constrain(scores, ("batch", "kv_heads", None, "kv_seq"))
     if valid is not None:
-        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        scores = jnp.where(valid, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", w.astype(dtype), v.astype(dtype),
                      preferred_element_type=jnp.float32).astype(dtype)

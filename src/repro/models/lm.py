@@ -407,13 +407,18 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """tokens: (B, 1) int32; pos: scalar int32 absolute position.
-    Returns (logits (B, V) fp32, new_cache)."""
+    """tokens: (B, 1) int32; pos: absolute position, scalar int32 or a
+    per-row (B,) int32 vector (continuous batching: each batch slot decodes
+    at its own position).  Returns (logits (B, V) fp32, new_cache)."""
     dtype = _compute_dtype(cfg)
     x = _embed(params, cfg, tokens, dtype)
     if cfg.is_encdec:
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["dec_pos"].astype(dtype), pos, 1, 0)[None]
+        if jnp.ndim(pos) > 0:
+            x = x + jnp.take(params["dec_pos"].astype(dtype),
+                             jnp.reshape(pos, (-1,)), axis=0)[:, None]
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"].astype(dtype), pos, 1, 0)[None]
 
     if cfg.rwkv:
         def step(x, inp):
@@ -535,9 +540,17 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
 # ---------------------------------------------------------------------------
 
 def prefill(params, cfg: ModelConfig, batch, cache_len: int, *,
-            q_chunk: int = 1024):
+            q_chunk: int = 1024, last_idx=None):
     """batch: {"tokens": (B, S)} (+ "frames" for enc-dec).  Returns
-    (last-token logits (B, V) fp32, cache primed for position S)."""
+    (last-token logits (B, V) fp32, cache primed for position S).
+
+    ``last_idx`` (optional (B,) int32) selects a per-row logits position
+    instead of ``S - 1`` — used by the continuous-batching engine, which
+    right-pads prompts up to a bucket length and needs the logits of each
+    row's *true* last prompt token.  (Causality guarantees right padding
+    cannot influence positions ``<= last_idx``; the decode loop overwrites
+    each padded KV entry at position ``p`` before the mask first admits it.)
+    """
     dtype = _compute_dtype(cfg)
     tokens = batch["tokens"]
     b = tokens.shape[0]
@@ -670,5 +683,6 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int, *,
         h = apply_norm(cfg, params["final_norm"], x)
 
     w_out = output_weights(params, cfg, dtype)
-    logits = (h[:, -1] @ w_out).astype(jnp.float32)
+    h_last = h[:, -1] if last_idx is None else h[jnp.arange(b), last_idx]
+    logits = (h_last @ w_out).astype(jnp.float32)
     return constrain(logits, ("batch", "vocab")), cache

@@ -1,0 +1,313 @@
+"""Slot-based continuous-batching decode engine with fault tolerance.
+
+The serving counterpart of the CheckpointHEFT runtime (paper Algorithm 3):
+
+* a fixed pool of decode *slots* (n_workers x slots_per_worker) advances one
+  token per engine step via a single jit'd ``make_serve_step`` call with a
+  per-slot position vector — new requests prefill into freed slots while
+  live requests keep decoding (no static-batch barrier);
+* each admitted request runs ``repCount`` copies on distinct workers
+  (:class:`~repro.serve.replicas.ReplicaPolicy`, Algorithm 1); the first
+  copy to emit its full budget wins, siblings are cancelled (their tokens
+  are the paper's late-replica wastage);
+* a worker failure kills all its slots (Algorithm 3 Case 1); only when the
+  *last* copy of a request dies is it resubmitted (steps 14-15/25-26) —
+  resuming from its latest decode snapshot when one exists (steps 22-23),
+  else re-prefilling from scratch (steps 16-21);
+* snapshots are taken every ``lambda`` generated tokens per slot, with
+  ``lambda`` re-derived online by :class:`repro.ft.interval.DynamicInterval`
+  from observed failures (Lemma 3.1).
+
+Supported model families: any architecture whose decode cache is a plain
+causal KV cache (dense / MoE).  Recurrent-state (RWKV), rolling-window
+hybrid (RG-LRU) and encoder-decoder caches do not compose with right-padded
+bucket prefill; ``repro.launch.serve`` falls back to the static batch for
+those.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.steps import make_prefill_step, make_serve_step
+from repro.ft.interval import DynamicInterval
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+from .metrics import ServeMetrics
+from .queue import AdmissionQueue, Request, WorkItem, prompt_bucket
+from .replicas import ReplicaPolicy, WorkerPool, uniform_policy
+from .snapshot import (DecodeSnapshot, SnapshotStore, cache_batch_axes,
+                       slot_get, slot_set)
+
+__all__ = ["EngineConfig", "ServeEngine", "engine_supported"]
+
+
+def engine_supported(cfg: ModelConfig) -> tuple[bool, str]:
+    """Continuous batching requires a plain causal KV cache."""
+    if cfg.rwkv:
+        return False, "rwkv recurrent state is not bucket-padding safe"
+    if cfg.rglru:
+        return False, "rg-lru rolling-window cache is not bucket-padding safe"
+    if cfg.is_encdec:
+        return False, "encoder-decoder serving needs per-request frames"
+    if cfg.n_image_tokens:
+        return False, "multimodal serving needs per-request image embeds"
+    return True, ""
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    cache_len: int = 128
+    q_chunk: int = 64
+    snapshots_enabled: bool = True
+    snapshot_lambda: float | None = None   # None -> DynamicInterval (Lemma 3.1)
+    snapshot_gamma: float = 1.0            # per-snapshot cost, token-steps
+    prior_mtbf_steps: float = 200.0
+    lam_min: float = 2.0
+    lam_max: float = 256.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    sid: int
+    busy: bool = False
+    rid: int = -1
+    copy_id: int = 0
+    pos: int = 0                 # absolute position of the next decode write
+    last_token: int = 0
+    max_new: int = 0
+    since_snapshot: int = 0
+    req: Request | None = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig | None = None, *,
+                 pool: WorkerPool, policy: ReplicaPolicy | None = None,
+                 params=None, metrics: ServeMetrics | None = None,
+                 seed: int = 0):
+        ok, why = engine_supported(cfg)
+        if not ok:
+            raise ValueError(f"{cfg.name}: {why}")
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        self.pool = pool
+        self.policy = policy or uniform_policy(1)
+        self.params = (params if params is not None
+                       else lm.init_params(jax.random.key(seed), cfg))
+        self.metrics = metrics or ServeMetrics()
+        self.queue = AdmissionQueue()
+        self.store = SnapshotStore()
+        self.slots = [_Slot(sid) for sid in range(pool.n_slots)]
+        self.active: dict[int, set[int]] = {}      # rid -> live slot ids
+        self.completed: dict[int, list[int]] = {}  # rid -> delivered tokens
+        self.requests: dict[int, Request] = {}
+        self.step_no = 0
+        self.interval = DynamicInterval(
+            gamma_s=self.ecfg.snapshot_gamma, lam_min=self.ecfg.lam_min,
+            lam_max=self.ecfg.lam_max,
+            prior_mtbf_s=self.ecfg.prior_mtbf_steps)
+
+        cache_len = self.ecfg.cache_len
+        self.cache = lm.init_cache(cfg, pool.n_slots, cache_len)
+        self.axes = cache_batch_axes(cfg, cache_len)
+        self._serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        self._get = jax.jit(
+            lambda cache, sid: slot_get(cache, self.axes, sid))
+        self._set = jax.jit(
+            lambda cache, sid, row: slot_set(cache, self.axes, sid, row),
+            donate_argnums=(0,))
+        self._insert = jax.jit(
+            lambda cache, sid, row1: slot_set(
+                cache, self.axes, sid,
+                jax.tree.map(lambda l, a: jnp.squeeze(l, a), row1,
+                             self.axes)),
+            donate_argnums=(0,))
+        self._prefill_fns: dict[int, callable] = {}
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; returns its replication count."""
+        bucket = prompt_bucket(req.prompt_len)
+        if bucket + req.max_new_tokens > self.ecfg.cache_len:
+            raise ValueError(
+                f"request {req.rid}: bucket {bucket} + max_new "
+                f"{req.max_new_tokens} exceeds cache_len "
+                f"{self.ecfg.cache_len}")
+        self.requests[req.rid] = req
+        self.metrics.register(req)
+        rep = self.policy.rep_for(req)
+        for k in range(rep):
+            self.queue.submit(WorkItem(req, copy_id=k))
+        return rep
+
+    # -- failures (Algorithm 3 Case 1) ---------------------------------------
+    def _on_worker_failures(self, t: int) -> None:
+        for wid in self.pool.step_failures(t):
+            self.metrics.failures += 1
+            self.interval.record_failure(float(t))
+            self.interval.record_repair(float(self.pool.mttr_steps))
+            for sid in self.pool.slots_of(wid):
+                slot = self.slots[sid]
+                if slot.busy:
+                    self._kill_copy(slot, resubmit_if_last=True)
+
+    def _kill_copy(self, slot: _Slot, *, resubmit_if_last: bool) -> None:
+        rid = slot.rid
+        live = self.active.get(rid, set())
+        live.discard(slot.sid)
+        slot.busy = False
+        slot.req = None
+        slot.tokens = []
+        if not resubmit_if_last or rid in self.completed:
+            return
+        # resubmit only when every copy has failed AND none is still queued
+        if not live and rid not in self.queue.pending_rids():
+            snap = (self.store.get(rid)
+                    if self.ecfg.snapshots_enabled else None)
+            self.queue.submit(WorkItem(self.requests[rid], copy_id=0,
+                                       snapshot=snap, is_resubmission=True))
+            self.metrics.resubmissions += 1
+
+    # -- admission into freed slots ------------------------------------------
+    def _admit(self, t: int) -> None:
+        for slot in self.slots:
+            wid = self.pool.worker_of(slot.sid)
+            if slot.busy or not self.pool.is_up(wid, t):
+                continue
+
+            def admissible(item: WorkItem, _wid=wid) -> bool:
+                rid = item.req.rid
+                if rid in self.completed or item.req.arrival > t:
+                    return False
+                others = self.active.get(rid, set())
+                return all(self.pool.worker_of(s) != _wid for s in others)
+
+            item = self.queue.pop(admissible)
+            if item is not None:
+                self._start(slot, item, t)
+
+    def _prefill(self, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is None:
+            fn = jax.jit(make_prefill_step(
+                self.cfg, self.ecfg.cache_len,
+                q_chunk=min(self.ecfg.q_chunk, bucket), with_last_idx=True))
+            self._prefill_fns[bucket] = fn
+        return fn
+
+    def _start(self, slot: _Slot, item: WorkItem, t: int) -> None:
+        req = item.req
+        slot.busy = True
+        slot.rid = req.rid
+        slot.copy_id = item.copy_id
+        slot.max_new = req.max_new_tokens
+        slot.req = req
+        slot.since_snapshot = 0
+        self.active.setdefault(req.rid, set()).add(slot.sid)
+        snap: DecodeSnapshot | None = item.snapshot
+        if snap is not None:
+            row = jax.tree.map(jnp.asarray, snap.cache_row)
+            self.cache = self._set(self.cache, slot.sid, row)
+            slot.pos = snap.pos
+            slot.tokens = list(snap.tokens)
+            slot.last_token = snap.last_token
+            self.metrics.restores += 1
+        else:
+            p = req.prompt_len
+            bucket = prompt_bucket(p)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :p] = np.asarray(req.prompt, np.int32)
+            logits, row1 = self._prefill(bucket)(
+                self.params, {"tokens": jnp.asarray(padded)},
+                jnp.asarray([p - 1], jnp.int32))
+            self.cache = self._insert(self.cache, slot.sid, row1)
+            tok = int(np.argmax(np.asarray(logits[0])))
+            slot.pos = p
+            slot.tokens = [tok]
+            slot.last_token = tok
+            self.metrics.prefill_tokens += bucket
+        if len(slot.tokens) >= slot.max_new:
+            self._finish(slot, t)
+
+    # -- one batched decode step ---------------------------------------------
+    def _decode(self, t: int) -> None:
+        busy = [s for s in self.slots if s.busy]
+        if not busy:
+            return
+        toks = np.zeros((len(self.slots), 1), np.int32)
+        poss = np.zeros((len(self.slots),), np.int32)
+        for s in self.slots:
+            toks[s.sid, 0] = s.last_token
+            poss[s.sid] = s.pos
+        nxt, _, self.cache = self._serve(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
+        nxt = np.asarray(nxt)
+        for s in busy:
+            tok = int(nxt[s.sid, 0])
+            s.tokens.append(tok)
+            s.last_token = tok
+            s.pos += 1
+            s.since_snapshot += 1
+            self.metrics.decode_tokens += 1
+        for s in busy:
+            if s.busy and len(s.tokens) >= s.max_new:
+                self._finish(s, t)
+
+    def _finish(self, slot: _Slot, t: int) -> None:
+        rid = slot.rid
+        self.completed[rid] = list(slot.tokens[:slot.max_new])
+        self.metrics.complete(rid, t)
+        self.queue.cancel(rid)
+        self.store.drop(rid)
+        for sid in sorted(self.active.get(rid, set())):
+            s = self.slots[sid]
+            s.busy = False           # late replicas: tokens become wastage
+            s.req = None
+            s.tokens = []
+        self.active.pop(rid, None)
+
+    # -- snapshot cadence (Lemma 3.1 online) ---------------------------------
+    def _snapshot_every(self) -> int:
+        if self.ecfg.snapshot_lambda is not None:
+            return max(1, int(round(self.ecfg.snapshot_lambda)))
+        return max(1, int(round(self.interval.current_lambda())))
+
+    def _take_snapshots(self, t: int) -> None:
+        if not self.ecfg.snapshots_enabled:
+            return
+        cadence = self._snapshot_every()
+        for s in self.slots:
+            if s.busy and s.since_snapshot >= cadence:
+                row = jax.device_get(self._get(self.cache, s.sid))
+                self.store.save(DecodeSnapshot(
+                    rid=s.rid, pos=s.pos, tokens=list(s.tokens),
+                    last_token=s.last_token, cache_row=row, step=t))
+                self.metrics.snapshots += 1
+                self.metrics.snapshot_overhead_tokens += \
+                    self.ecfg.snapshot_gamma
+                s.since_snapshot = 0
+
+    # -- main loop -----------------------------------------------------------
+    def step(self) -> None:
+        t = self.step_no
+        self._on_worker_failures(t)
+        self._admit(t)
+        self._decode(t)
+        self._take_snapshots(t)
+        self.step_no = t + 1
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(s.busy for s in self.slots)
+
+    def run(self, max_steps: int = 10_000) -> ServeMetrics:
+        while self.pending() and self.step_no < max_steps:
+            self.step()
+        return self.metrics
+
+    def output(self, rid: int) -> list[int] | None:
+        return self.completed.get(rid)

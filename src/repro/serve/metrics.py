@@ -1,0 +1,128 @@
+"""Serving metrics: goodput, latency percentiles, usage/wastage counters.
+
+Online counterparts of the simulator metrics in ``repro.core.metrics``
+(paper Section 4.2):
+
+* **usage** — total tokens *processed* across all request copies: prefill
+  tokens (at padded bucket length), decoded tokens, and snapshot overhead
+  (the Eq. 10 ``gamma`` term), mirroring "processor seconds spent executing
+  task copies";
+* **wastage** — processed tokens that did not contribute to a delivered
+  response, computed as ``usage - useful`` where useful is one clean copy
+  (true prompt + decode budget) per completed request: late-replica tokens,
+  beyond-last-snapshot tokens lost to failures, re-prefills, and bucket
+  padding all land here, mirroring Fig. 9 (failed requests waste everything
+  they executed);
+* **goodput** — requests completed within their deadline per 1k decode
+  steps (the serving analogue of workflow success rate x 1/TET).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["RequestRecord", "ServeMetrics", "format_table"]
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    arrival: int
+    deadline: int | None
+    prompt_len: int
+    max_new: int
+    completed_step: int | None = None
+
+    @property
+    def completed(self) -> bool:
+        return self.completed_step is not None
+
+    @property
+    def in_deadline(self) -> bool:
+        return (self.completed and
+                (self.deadline is None or self.completed_step <= self.deadline))
+
+    @property
+    def latency(self) -> float:
+        return (float(self.completed_step - self.arrival)
+                if self.completed else float("nan"))
+
+
+class ServeMetrics:
+    def __init__(self) -> None:
+        self.records: dict[int, RequestRecord] = {}
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.snapshot_overhead_tokens = 0.0
+        self.failures = 0
+        self.resubmissions = 0
+        self.restores = 0
+        self.snapshots = 0
+
+    # -- lifecycle hooks (called by the engine) ------------------------------
+    def register(self, req) -> None:
+        self.records[req.rid] = RequestRecord(
+            rid=req.rid, arrival=req.arrival, deadline=req.deadline,
+            prompt_len=req.prompt_len, max_new=req.max_new_tokens)
+
+    def complete(self, rid: int, step: int) -> None:
+        self.records[rid].completed_step = step
+
+    # -- summaries -----------------------------------------------------------
+    @property
+    def usage_tokens(self) -> float:
+        return (self.prefill_tokens + self.decode_tokens +
+                self.snapshot_overhead_tokens)
+
+    @property
+    def useful_tokens(self) -> float:
+        """One clean copy (true prompt + decode budget) per completion."""
+        return float(sum(r.prompt_len + r.max_new
+                         for r in self.records.values() if r.completed))
+
+    @property
+    def wasted_tokens(self) -> float:
+        return max(float(self.usage_tokens) - self.useful_tokens, 0.0)
+
+    def summary(self, horizon_steps: int) -> dict[str, float]:
+        recs = list(self.records.values())
+        lats = np.asarray([r.latency for r in recs if r.completed], float)
+        done = sum(r.completed for r in recs)
+        good = sum(r.in_deadline for r in recs)
+        useful_new = sum(r.max_new for r in recs if r.completed)
+        out = {
+            "n_requests": float(len(recs)),
+            "completed": float(done),
+            "in_deadline": float(good),
+            "goodput": 1000.0 * good / max(horizon_steps, 1),
+            "useful_tok_per_step": useful_new / max(horizon_steps, 1),
+            "p50_latency": float(np.percentile(lats, 50)) if lats.size else float("nan"),
+            "p99_latency": float(np.percentile(lats, 99)) if lats.size else float("nan"),
+            "usage_tokens": float(self.usage_tokens),
+            "wasted_tokens": self.wasted_tokens,
+            "wastage_frac": self.wasted_tokens / max(self.usage_tokens, 1e-9),
+            "failures": float(self.failures),
+            "resubmissions": float(self.resubmissions),
+            "restores": float(self.restores),
+            "snapshots": float(self.snapshots),
+        }
+        return out
+
+
+def format_table(rows: list[dict], columns: list[tuple[str, str]]) -> str:
+    """Plain-text table: ``columns`` = [(key, header), ...]."""
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.2f}" if abs(v) < 1e4 else f"{v:.3g}"
+        return str(v)
+
+    cells = [[fmt(r.get(k, "")) for k, _ in columns] for r in rows]
+    headers = [h for _, h in columns]
+    widths = [max(len(h), *(len(c[i]) for c in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    line = "  ".join(h.rjust(w) for h, w in zip(headers, widths))
+    sep = "  ".join("-" * w for w in widths)
+    body = ["  ".join(c.rjust(w) for c, w in zip(row, widths))
+            for row in cells]
+    return "\n".join([line, sep] + body)

@@ -1,7 +1,9 @@
 """Unit + property tests for the triplet agglomerative clustering."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import pairwise_distances, replication_counts, triplet_agglomerate
 from repro.kernels.pairwise_affinity import ref as pa_ref

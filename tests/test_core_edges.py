@@ -1,0 +1,39 @@
+"""Edge-case regression tests for the core simulator utilities."""
+import math
+import warnings
+
+import pytest
+
+from repro.core import CkptLevel, SimConfig
+from repro.core.metrics import aggregate
+
+
+def test_ckpt_level_rejects_nonpositive_lam():
+    with pytest.raises(ValueError, match="lam"):
+        CkptLevel(lam=0.0, gamma=1.0)
+    with pytest.raises(ValueError, match="lam"):
+        CkptLevel(lam=-5.0, gamma=1.0)
+    with pytest.raises(ValueError, match="lam"):
+        CkptLevel(lam=float("nan"), gamma=1.0)
+
+
+def test_ckpt_level_rejects_negative_gamma():
+    with pytest.raises(ValueError, match="gamma"):
+        CkptLevel(lam=60.0, gamma=-1.0)
+
+
+def test_overhead_rate_well_defined():
+    cfg = SimConfig(ckpt_levels=(CkptLevel(60.0, 3.0),
+                                 CkptLevel(600.0, 30.0)))
+    assert cfg.overhead_rate() == pytest.approx(3.0 / 60.0 + 30.0 / 600.0)
+    assert SimConfig().overhead_rate() == 0.0
+
+
+def test_aggregate_empty_runs_is_explicit():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        out = aggregate([])
+    assert out["n_runs"] == 0.0
+    assert out["success_rate"] == 0.0
+    assert math.isnan(out["usage"])
+    assert math.isnan(out["tet"])

@@ -1,7 +1,9 @@
 """Unit + property tests: HEFT schedules and the CheckpointHEFT runtime."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (CRCHConfig, CloudEnvironment, SimConfig, CkptLevel,
                         baselines, generate_workflow, heft_schedule,

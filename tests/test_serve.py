@@ -1,0 +1,190 @@
+"""Tests for repro.serve: queue, snapshots, CRCH routing, and the engine's
+failure-determinism guarantee."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve import (AdmissionQueue, EngineConfig, Request, ServeEngine,
+                         ServeMetrics, WorkItem, WorkerPool, crch_policy,
+                         engine_supported, prompt_bucket, request_class,
+                         request_features, uniform_policy)
+from repro.serve.snapshot import cache_batch_axes, slot_get, slot_set
+
+
+def _req(rid, plen, newt, *, arrival=0, deadline=None, vocab=256, seed=0):
+    rng = np.random.default_rng(seed * 7919 + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(1, vocab, plen,
+                                       dtype=np.int64).astype(np.int32),
+                   max_new_tokens=newt, arrival=arrival, deadline=deadline)
+
+
+# ---------------------------------------------------------------- queue ----
+
+def test_prompt_bucket_next_pow2():
+    assert prompt_bucket(1) == 8
+    assert prompt_bucket(8) == 8
+    assert prompt_bucket(9) == 16
+    assert prompt_bucket(33) == 64
+
+
+def test_request_class_buckets():
+    c = request_class(_req(0, 13, 20))
+    assert (c.prompt_bucket, c.new_bucket) == (16, 32)
+
+
+def test_request_features_shape_and_slack():
+    reqs = [_req(0, 8, 8, deadline=100), _req(1, 16, 32)]
+    feats = request_features(reqs)
+    assert feats.shape == (2, 10)
+    assert feats[0, 4] == 100 - 16          # deadline slack
+    assert np.isfinite(feats).all()         # no deadline -> capped, not inf
+
+
+def test_admission_queue_resubmission_jumps_head_and_cancel():
+    q = AdmissionQueue()
+    q.submit(WorkItem(_req(0, 8, 8)))
+    q.submit(WorkItem(_req(1, 8, 8)))
+    q.submit(WorkItem(_req(2, 8, 8), is_resubmission=True))
+    assert q.pop().req.rid == 2
+    assert q.cancel(1) == 1
+    assert q.pending_rids() == {0}
+    # pop with a predicate skips inadmissible items without dropping them
+    assert q.pop(lambda it: it.req.rid == 99) is None
+    assert len(q) == 1
+
+
+# ------------------------------------------------------------- replicas ----
+
+def test_crch_policy_hedges_failure_prone_class_more():
+    """The long-decode outlier class must get a strictly larger hedging
+    budget than the dominant short class (and than no-replication)."""
+    reqs = ([_req(i, 8, 8, seed=1) for i in range(24)] +
+            [_req(100 + i, 30, 64, seed=1) for i in range(4)])
+    pol = crch_policy(reqs, max_rep=3)
+    short_rep = pol.rep_for(reqs[0])
+    long_rep = pol.rep_for(reqs[-1])
+    assert short_rep == 1
+    assert long_rep > short_rep
+    assert long_rep > uniform_policy(1).rep_for(reqs[-1])
+    assert long_rep <= 3
+
+
+def test_worker_pool_failure_and_repair():
+    pool = WorkerPool(2, 2, mtbf_steps=0.0, mttr_steps=5, seed=0)
+    assert pool.worker_of(3) == 1
+    assert list(pool.slots_of(0)) == [0, 1]
+    pool.force_failure(10, wid=0)
+    assert pool.step_failures(10) == [0]
+    assert not pool.is_up(0, 12)
+    assert pool.is_up(0, 15)
+    assert pool.is_up(1, 12)
+
+
+# -------------------------------------------------------------- snapshot ----
+
+def test_slot_get_set_roundtrip():
+    cfg = get_config("olmo-1b", tiny=True)
+    cache = lm.init_cache(cfg, 3, 16)
+    axes = cache_batch_axes(cfg, 16)
+    marked = jax.tree.map(lambda l: l + 1.0, cache)
+    row = slot_get(marked, axes, 1)
+    out = slot_set(cache, axes, 1, row)
+    for leaf, a, want in zip(jax.tree.leaves(out), jax.tree.leaves(axes),
+                             jax.tree.leaves(marked)):
+        got = np.moveaxis(np.asarray(leaf), a, 0)
+        ref = np.moveaxis(np.asarray(want), a, 0)
+        np.testing.assert_array_equal(got[1], ref[1])   # written row
+        assert (got[0] == 0).all() and (got[2] == 0).all()  # untouched
+
+
+# --------------------------------------------------------------- metrics ----
+
+def test_metrics_wastage_accounting():
+    m = ServeMetrics()
+    r = _req(0, 10, 10, deadline=50)
+    m.register(r)
+    m.prefill_tokens += 16
+    m.decode_tokens += 10
+    m.snapshot_overhead_tokens += 2.0
+    m.complete(0, 30)
+    s = m.summary(100)
+    assert s["completed"] == 1
+    assert s["in_deadline"] == 1
+    assert s["usage_tokens"] == 28
+    assert s["wasted_tokens"] == 28 - 20
+    assert s["p50_latency"] == 30
+
+
+# ---------------------------------------------------------------- engine ----
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("olmo-1b", tiny=True)
+    ok, why = engine_supported(cfg)
+    assert ok, why
+    params = lm.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _run_engine(cfg, params, reqs, *, fail=None, snapshot_lambda=4,
+                policy=None):
+    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+                    for r in reqs)
+    pool = WorkerPool(2, 2, mtbf_steps=0.0, mttr_steps=6, seed=0)
+    if fail is not None:
+        pool.force_failure(fail[0], wid=fail[1])
+    engine = ServeEngine(
+        cfg, EngineConfig(cache_len=cache_len, q_chunk=32,
+                          snapshot_lambda=snapshot_lambda),
+        pool=pool, policy=policy or uniform_policy(1), params=params)
+    for r in reqs:
+        engine.submit(r)
+    engine.run(max_steps=2_000)
+    return engine
+
+
+def test_engine_failure_resume_matches_failure_free(tiny_setup):
+    """Mid-decode worker failure + snapshot resume must reproduce the
+    failure-free greedy tokens exactly (Algorithm 3's correctness bar)."""
+    cfg, params = tiny_setup
+    reqs = [_req(i, 8 + 3 * i, 16, vocab=cfg.vocab_size, seed=3)
+            for i in range(4)]
+    clean = _run_engine(cfg, params, reqs)
+    faulty = _run_engine(cfg, params, reqs, fail=(9, 0))
+    assert len(clean.completed) == len(reqs)
+    assert len(faulty.completed) == len(reqs)
+    assert faulty.metrics.failures >= 1
+    assert faulty.metrics.resubmissions >= 1
+    for rid in clean.completed:
+        assert clean.completed[rid] == faulty.completed[rid], rid
+
+
+def test_engine_replicated_requests_survive_single_worker_loss(tiny_setup):
+    """With a replica on each worker, killing one worker must not trigger a
+    resubmission — the surviving copy delivers."""
+    cfg, params = tiny_setup
+    reqs = [_req(0, 12, 16, vocab=cfg.vocab_size, seed=5)]
+    engine = _run_engine(cfg, params, reqs, fail=(6, 0),
+                         policy=uniform_policy(2))
+    assert engine.completed and engine.metrics.failures >= 1
+    assert engine.metrics.resubmissions == 0
+
+
+def test_engine_rejects_oversized_request(tiny_setup):
+    cfg, params = tiny_setup
+    engine_req = _req(0, 8, 8, vocab=cfg.vocab_size)
+    cache_len = 16
+    pool = WorkerPool(1, 2, mtbf_steps=0.0, seed=0)
+    engine = ServeEngine(cfg, EngineConfig(cache_len=cache_len, q_chunk=32),
+                         pool=pool, policy=uniform_policy(1), params=params)
+    engine.submit(engine_req)
+    with pytest.raises(ValueError):
+        engine.submit(_req(1, 20, 16, vocab=cfg.vocab_size))
+
+
+def test_engine_supported_gates_recurrent_families():
+    ok, why = engine_supported(get_config("rwkv6-3b", tiny=True))
+    assert not ok and why
