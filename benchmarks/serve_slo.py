@@ -39,12 +39,13 @@ from repro.serve import (EngineConfig, Request, ServeEngine,  # noqa: E402
 POLICIES = ("none", "all", "crch")
 
 
-def make_workload(*, n_short: int, n_medium: int, n_long: int,
+def make_workload(cfg, *, n_short: int, n_medium: int, n_long: int,
                   arrival_spread: int, slack_factor: float,
-                  vocab: int, seed: int) -> list[Request]:
+                  seed: int) -> list[Request]:
     """Mostly-short traffic with a tail of long-decode requests — the
     failure-exposed outlier class CRCH should learn to hedge."""
     rng = np.random.default_rng(seed)
+    vocab = cfg.vocab_size
     spec = ([(int(rng.integers(6, 16)), 8) for _ in range(n_short)] +
             [(int(rng.integers(16, 32)), 16) for _ in range(n_medium)] +
             [(int(rng.integers(24, 32)), 48) for _ in range(n_long)])
@@ -52,11 +53,16 @@ def make_workload(*, n_short: int, n_medium: int, n_long: int,
     reqs = []
     for rid, (plen, newt) in enumerate(spec):
         arrival = int(rng.integers(0, arrival_spread))
+        frames = (rng.normal(size=(cfg.n_frames, cfg.d_model))
+                  .astype(np.float32) if cfg.is_encdec else None)
+        embeds = (rng.normal(size=(cfg.n_image_tokens, cfg.d_model))
+                  .astype(np.float32) if cfg.n_image_tokens else None)
         reqs.append(Request(
             rid=rid,
             prompt=rng.integers(1, vocab, plen, dtype=np.int64).astype(np.int32),
             max_new_tokens=newt, arrival=arrival,
-            deadline=arrival + int(slack_factor * (plen + newt))))
+            deadline=arrival + int(slack_factor * (plen + newt)),
+            frames=frames, image_embeds=embeds))
     return reqs
 
 
@@ -71,8 +77,11 @@ def policy_for(name: str, workload: list[Request], max_rep: int):
 def run_cell(cfg, params, workload, *, policy_name: str, env: str,
              n_workers: int, slots_per_worker: int, max_rep: int,
              max_steps: int, seed: int) -> dict:
-    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+    offset = cfg.n_image_tokens or 0
+    cache_len = max(offset + prompt_bucket(r.prompt_len) + r.max_new_tokens
                     for r in workload)
+    if cfg.rglru and cfg.window:
+        cache_len = max(cache_len, cfg.window)
     policy = policy_for(policy_name, workload, max_rep)
     pool = WorkerPool(n_workers, slots_per_worker, environment=env,
                       seed=seed)
@@ -86,7 +95,8 @@ def run_cell(cfg, params, workload, *, policy_name: str, env: str,
     t0 = time.perf_counter()
     metrics = engine.run(max_steps=max_steps)
     wall = time.perf_counter() - t0
-    row = {"policy": policy.name, "env": env, **metrics.summary(engine.step_no)}
+    row = {"arch": cfg.name, "policy": policy.name, "env": env,
+           **metrics.summary(engine.step_no)}
     row["steps"] = float(engine.step_no)
     row["wall_s"] = wall
     return row
@@ -106,8 +116,7 @@ def run(fast: bool = True, *, envs=("normal", "unstable"), seed: int = 0,
                            arrival_spread=600, slack_factor=4.0)
         pool_kw = dict(n_workers=8, slots_per_worker=4, max_rep=3,
                        max_steps=10_000)
-    workload = make_workload(vocab=cfg.vocab_size, seed=seed + 17,
-                             **workload_kw)
+    workload = make_workload(cfg, seed=seed + 17, **workload_kw)
     rows = []
     for env in envs:
         for pol in POLICIES:
@@ -119,30 +128,36 @@ def run(fast: bool = True, *, envs=("normal", "unstable"), seed: int = 0,
 
 
 def check_tradeoff(rows: list[dict]) -> list[str]:
-    """Paper acceptance: per env, CRCH wastes less than Replicate-All and
-    completes (in deadline) at least as much as no-replication, strictly
-    more in at least one environment."""
+    """Paper acceptance, per (arch, env): CRCH wastes less than
+    Replicate-All and completes (in deadline) at least as much as
+    no-replication, strictly more in at least one environment per arch."""
     msgs = []
-    by = {(r["env"], r["policy"]): r for r in rows}
+    by = {(r["arch"], r["env"], r["policy"]): r for r in rows}
+    archs = sorted({r["arch"] for r in rows})
     envs = sorted({r["env"] for r in rows})
-    strict = False
-    for env in envs:
-        none_, all_, crch = (by[(env, "none")],
-                             by[(env, next(p for (e, p) in by if e == env and p.startswith("all")))],
-                             by[(env, "crch")])
-        ok_waste = crch["wasted_tokens"] < all_["wasted_tokens"]
-        ok_done = crch["in_deadline"] >= none_["in_deadline"]
-        strict |= crch["in_deadline"] > none_["in_deadline"]
-        msgs.append(f"[{env}] crch wasted {crch['wasted_tokens']:.0f} "
-                    f"< all {all_['wasted_tokens']:.0f}: "
-                    f"{'OK' if ok_waste else 'FAIL'} | crch in-deadline "
-                    f"{crch['in_deadline']:.0f} >= none "
-                    f"{none_['in_deadline']:.0f}: "
-                    f"{'OK' if ok_done else 'FAIL'}")
-        if not (ok_waste and ok_done):
-            msgs.append(f"[{env}] TRADE-OFF VIOLATED")
-    msgs.append("strictly more in-deadline completions than no-replication "
-                f"in >=1 env: {'OK' if strict else 'FAIL'}")
+    for arch in archs:
+        strict = False
+        for env in envs:
+            all_name = next(p for (a, e, p) in by
+                            if a == arch and e == env and p.startswith("all"))
+            none_ = by[(arch, env, "none")]
+            all_ = by[(arch, env, all_name)]
+            crch = by[(arch, env, "crch")]
+            ok_waste = crch["wasted_tokens"] < all_["wasted_tokens"]
+            ok_done = crch["in_deadline"] >= none_["in_deadline"]
+            strict |= crch["in_deadline"] > none_["in_deadline"]
+            msgs.append(f"[{arch}/{env}] crch wasted "
+                        f"{crch['wasted_tokens']:.0f} "
+                        f"< all {all_['wasted_tokens']:.0f}: "
+                        f"{'OK' if ok_waste else 'FAIL'} | crch in-deadline "
+                        f"{crch['in_deadline']:.0f} >= none "
+                        f"{none_['in_deadline']:.0f}: "
+                        f"{'OK' if ok_done else 'FAIL'}")
+            if not (ok_waste and ok_done):
+                msgs.append(f"[{arch}/{env}] TRADE-OFF VIOLATED")
+        msgs.append(f"[{arch}] strictly more in-deadline completions than "
+                    f"no-replication in >=1 env: "
+                    f"{'OK' if strict else 'FAIL'}")
     return msgs
 
 
@@ -150,15 +165,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--arch", nargs="+", default=["olmo-1b", "rwkv6-3b"],
+                    help="architectures to sweep (one engine run per arch)")
     ap.add_argument("--envs", nargs="+",
                     default=["normal", "unstable"],
                     choices=["stable", "normal", "unstable"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     fast = not args.full
-    rows = run(fast, envs=tuple(args.envs), seed=args.seed, arch=args.arch)
-    cols = [("env", "env"), ("policy", "policy"),
+    rows = []
+    for arch in args.arch:
+        rows.extend(run(fast, envs=tuple(args.envs), seed=args.seed,
+                        arch=arch))
+    cols = [("arch", "arch"), ("env", "env"), ("policy", "policy"),
             ("n_requests", "reqs"), ("completed", "done"),
             ("in_deadline", "slo"), ("goodput", "goodput/1k"),
             ("p50_latency", "p50"), ("p99_latency", "p99"),

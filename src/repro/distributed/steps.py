@@ -69,18 +69,42 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None, *,
     return train_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, *, cache_axes=None):
     """One greedy decode step: (params, cache, tokens (B,1), pos) ->
     (next_tokens (B,1), logits fp32, cache).  ``pos`` may be a scalar
     (static batch, all rows at the same position) or a (B,) vector
-    (continuous batching, per-slot positions)."""
+    (continuous batching, per-slot positions).
+
+    With ``cache_axes`` (the per-leaf batch-axis pytree from
+    ``repro.serve.snapshot.cache_batch_axes``) the returned step takes an
+    extra ``live`` (B,) bool argument and only commits cache writes for live
+    rows — freed slots keep their previous row bit-identical.  Without this,
+    idle slots' stale ``last_token``/``pos`` would silently rewrite cache
+    rows every tick: harmless for dense KV only because prefill overwrites
+    the whole row on reuse, but fatal for recurrent (RWKV / RG-LRU) state,
+    which accumulates."""
 
     def serve_step(params, cache, tokens, pos):
         logits, cache = lm.decode_step(params, cfg, cache, tokens, pos)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return nxt, logits, cache
 
-    return serve_step
+    if cache_axes is None:
+        return serve_step
+
+    def serve_step_masked(params, cache, tokens, pos, live):
+        logits, new_cache = lm.decode_step(params, cfg, cache, tokens, pos)
+
+        def commit(new, old, axis):
+            shape = [1] * new.ndim
+            shape[axis] = new.shape[axis]
+            return jnp.where(live.reshape(shape), new, old)
+
+        new_cache = jax.tree.map(commit, new_cache, cache, cache_axes)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, new_cache
+
+    return serve_step_masked
 
 
 def make_prefill_step(cfg: ModelConfig, cache_len: int, *,

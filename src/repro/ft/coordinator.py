@@ -45,6 +45,24 @@ class FaultInjector:
     def fails_at(self, step: int) -> bool:
         return step in self.fail_steps
 
+    def consume(self, step: int) -> bool:
+        """Pop the failure scheduled at ``step`` (True if one fired)."""
+        if step in self.fail_steps:
+            self.fail_steps.discard(step)
+            return True
+        return False
+
+    def defer(self, step: int, to_step: int) -> None:
+        """Move a failure scheduled at ``step`` to ``to_step``.
+
+        Used when the target is already down at ``step``: the fault is not
+        silently absorbed by the outage — it strikes again the moment the
+        target is back up (``to_step`` = repair completion).
+        """
+        if to_step > step and step in self.fail_steps:
+            self.fail_steps.discard(step)
+            self.fail_steps.add(int(to_step))
+
 
 @dataclasses.dataclass
 class CoordinatorReport:
@@ -101,7 +119,7 @@ class TrainingCoordinator:
         ckpts += 1
         virtual_t = 0.0
         while self.step < n_steps:
-            if self.injector is not None and self.injector.fails_at(self.step):
+            if self.injector is not None and self.injector.consume(self.step):
                 # host failure mid-step: lose work since last checkpoint
                 failures += 1
                 wasted += self.step - self._last_ckpt_step
@@ -109,7 +127,6 @@ class TrainingCoordinator:
                 self.interval.record_repair(
                     self.injector.mttr_steps * self.step_time_s)
                 virtual_t += self.injector.mttr_steps * self.step_time_s
-                self.injector.fail_steps.discard(self.step)
                 self._restore()
                 restores += 1
                 continue

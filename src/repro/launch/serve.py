@@ -3,15 +3,17 @@
 Requests are admitted through ``repro.serve``: freed decode slots prefill
 new requests while live requests keep decoding; replication follows the
 selected policy (``none`` / ``all-k`` / ``crch``) and failed workers resume
-requests from their last decode snapshot.  Architectures whose caches do
-not compose with continuous batching (RWKV, RG-LRU hybrids, enc-dec,
-multimodal) fall back to the legacy one-shot static batch.
+requests from their last decode snapshot.  Every model family — dense, MoE,
+RWKV, RG-LRU hybrid, encoder-decoder, multimodal — runs through the
+continuous engine; ``--static`` explicitly selects the legacy one-shot
+static batch (a baseline, not a fallback), and ``--verify-static`` checks
+the engine's tokens token-for-token against the batch=1 static reference.
 
 On TPU this runs under the production mesh with the ZeRO-1/TP weight layout
 and the sequence-sharded KV cache; on CPU, ``--tiny`` validates the same
 code end-to-end.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --tiny \
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --tiny \
         --requests 8 --prompt-len 32 --new-tokens 16 --policy crch \
         --env normal
 """
@@ -32,8 +34,8 @@ from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.shapes import make_batch
 from repro.models import lm
 from repro.serve import (EngineConfig, Request, ServeEngine, WorkerPool,
-                         crch_policy, engine_supported, prompt_bucket,
-                         uniform_policy)
+                         crch_policy, engine_supported, greedy_reference,
+                         prompt_bucket, uniform_policy)
 
 
 def _sharded_params(cfg, mesh, seed: int):
@@ -50,19 +52,27 @@ def _make_requests(cfg, n: int, prompt_len: int, new_tokens: int,
     for i in range(n):
         plen = int(rng.integers(max(prompt_len // 2, 4), prompt_len + 1))
         newt = new_tokens if i % 3 else new_tokens * 2
+        frames = (rng.normal(size=(cfg.n_frames, cfg.d_model))
+                  .astype(np.float32) if cfg.is_encdec else None)
+        embeds = (rng.normal(size=(cfg.n_image_tokens, cfg.d_model))
+                  .astype(np.float32) if cfg.n_image_tokens else None)
         reqs.append(Request(
             rid=i, prompt=rng.integers(1, cfg.vocab_size, plen,
                                        dtype=np.int64).astype(np.int32),
             max_new_tokens=newt, arrival=0,
-            deadline=16 * (plen + newt)))
+            deadline=16 * (plen + newt),
+            frames=frames, image_embeds=embeds))
     return reqs
 
 
 def continuous_main(cfg, mesh, args) -> None:
     reqs = _make_requests(cfg, args.requests, args.prompt_len,
                           args.new_tokens, args.seed)
-    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+    offset = cfg.n_image_tokens or 0
+    cache_len = max(offset + prompt_bucket(r.prompt_len) + r.max_new_tokens
                     for r in reqs)
+    if cfg.rglru and cfg.window:
+        cache_len = max(cache_len, cfg.window)
     if args.policy == "crch":
         policy = crch_policy(reqs)
     elif args.policy == "all":
@@ -101,6 +111,15 @@ def continuous_main(cfg, mesh, args) -> None:
     done = sorted(engine.completed)
     assert done, "no requests completed"
     print("sample:", engine.completed[done[0]][:12])
+    if args.verify_static:
+        with use_rules(mesh):
+            ref = greedy_reference(params, cfg, reqs, cache_len, q_chunk=64)
+        mismatched = [r.rid for r in reqs
+                      if engine.output(r.rid) != ref[r.rid]]
+        print(f"parity vs static reference: "
+              f"{len(reqs) - len(mismatched)}/{len(reqs)} token-exact"
+              + (f" (MISMATCH rids {mismatched})" if mismatched else ""))
+        assert not mismatched, f"token parity failed for rids {mismatched}"
 
 
 def static_main(cfg, mesh, args) -> None:
@@ -161,7 +180,10 @@ def main() -> None:
                     default="none")
     ap.add_argument("--max-steps", type=int, default=20_000)
     ap.add_argument("--static", action="store_true",
-                    help="force the legacy one-shot static batch")
+                    help="run the legacy one-shot static batch baseline")
+    ap.add_argument("--verify-static", action="store_true",
+                    help="check engine tokens against the batch=1 static "
+                         "reference, token-for-token")
     ap.add_argument("--mesh", choices=("debug", "single", "multi"),
                     default="debug")
     ap.add_argument("--seed", type=int, default=0)
@@ -171,9 +193,9 @@ def main() -> None:
     mesh = (make_debug_mesh() if args.mesh == "debug" else
             make_production_mesh(multi_pod=(args.mesh == "multi")))
     supported, why = engine_supported(cfg)
-    if args.static or not supported:
-        if not args.static:
-            print(f"[static fallback] {why}")
+    if not supported:
+        raise SystemExit(f"{args.arch}: {why}")
+    if args.static:
         static_main(cfg, mesh, args)
     else:
         continuous_main(cfg, mesh, args)

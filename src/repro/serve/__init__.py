@@ -44,7 +44,16 @@ Architecture / paper mapping
     resuming from its latest snapshot when one exists (steps 22-23) instead
     of re-prefilling (steps 16-21).  The snapshot cadence is re-derived
     online from observed failures by ``repro.ft.interval.DynamicInterval``
-    (Lemma 3.1).
+    (Lemma 3.1).  Every model family runs through the engine: recurrent
+    (RWKV) and rolling-window hybrid (RG-LRU) caches prefill per request at
+    the exact prompt length (their state is not padding-safe), and enc-dec /
+    multimodal requests carry per-request side inputs whose derived state
+    lives in the slot's cache row.
+
+``reference.py`` — parity oracle
+    Batch=1 exact-length static greedy decoding through the same model
+    code; token-for-token agreement with the engine certifies that slot
+    reuse, padding, masking and snapshot restore are output-transparent.
 
 ``metrics.py`` — Section 4.2 online
     Usage (tokens processed across all copies incl. checkpoint overhead),
@@ -60,6 +69,7 @@ from .engine import EngineConfig, ServeEngine, engine_supported
 from .metrics import ServeMetrics, format_table
 from .queue import (AdmissionQueue, Request, RequestClass, WorkItem,
                     prompt_bucket, request_class, request_features)
+from .reference import greedy_reference
 from .replicas import (SERVE_ENVIRONMENTS, ReplicaPolicy, WorkerPool,
                        crch_policy, uniform_policy)
 from .snapshot import DecodeSnapshot, SnapshotStore
@@ -80,6 +90,7 @@ __all__ = [
     "crch_policy",
     "engine_supported",
     "format_table",
+    "greedy_reference",
     "prompt_bucket",
     "request_class",
     "request_features",

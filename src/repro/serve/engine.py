@@ -18,14 +18,24 @@ The serving counterpart of the CheckpointHEFT runtime (paper Algorithm 3):
   ``lambda`` re-derived online by :class:`repro.ft.interval.DynamicInterval`
   from observed failures (Lemma 3.1).
 
-Supported model families: any architecture whose decode cache is a plain
-causal KV cache (dense / MoE).  Recurrent-state (RWKV), rolling-window
-hybrid (RG-LRU) and encoder-decoder caches do not compose with right-padded
-bucket prefill; ``repro.launch.serve`` falls back to the static batch for
-those.
+Supported model families: **all of them**.  Dense / MoE causal-KV
+architectures prefill into right-padded buckets (causality + the
+overwrite-before-admit cache argument make padding safe).  Recurrent-state
+(RWKV) and rolling-window hybrid (RG-LRU) caches are *not* padding-safe —
+pad positions would advance the recurrent state — so those families prefill
+per request at the exact prompt length instead of a bucket.  Encoder-decoder
+and multimodal requests carry their side inputs (encoder frames, image
+embeds) on the :class:`~repro.serve.queue.Request`; the derived per-slot
+state (cross-attention K/V, image-token KV rows) lands inside the slot's
+cache row, so freed-slot reuse and snapshot/restore carry it automatically.
+Idle slots are masked out of the batched cache write every tick (stale
+``last_token``/``pos`` must never rewrite a freed row), and completed
+request state is evicted FIFO beyond ``retain_completed`` so a long-running
+service holds bounded host memory.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -47,15 +57,16 @@ __all__ = ["EngineConfig", "ServeEngine", "engine_supported"]
 
 
 def engine_supported(cfg: ModelConfig) -> tuple[bool, str]:
-    """Continuous batching requires a plain causal KV cache."""
-    if cfg.rwkv:
-        return False, "rwkv recurrent state is not bucket-padding safe"
-    if cfg.rglru:
-        return False, "rg-lru rolling-window cache is not bucket-padding safe"
-    if cfg.is_encdec:
-        return False, "encoder-decoder serving needs per-request frames"
-    if cfg.n_image_tokens:
-        return False, "multimodal serving needs per-request image embeds"
+    """Whether the continuous-batching engine can drive ``cfg``.
+
+    Every assigned family is supported: recurrent state (RWKV) and
+    rolling-window hybrids (RG-LRU) via exact-length per-request prefill,
+    encoder-decoder and multimodal via per-request side inputs whose derived
+    state lives in the slot's cache row.  Kept as a predicate so a future
+    family can still be gated with a reason string.
+    """
+    if cfg.rwkv and cfg.d_model % 64 != 0:
+        return False, "rwkv d_model must be a multiple of the 64 head size"
     return True, ""
 
 
@@ -69,6 +80,10 @@ class EngineConfig:
     prior_mtbf_steps: float = 200.0
     lam_min: float = 2.0
     lam_max: float = 256.0
+    # completed requests retained for ``output()`` before FIFO eviction of
+    # their request / completed / snapshot entries (bounds engine host state
+    # for a long-running service)
+    retain_completed: int = 4096
 
 
 @dataclasses.dataclass
@@ -95,6 +110,15 @@ class ServeEngine:
             raise ValueError(f"{cfg.name}: {why}")
         self.cfg = cfg
         self.ecfg = ecfg or EngineConfig()
+        if cfg.rglru and cfg.window and self.ecfg.cache_len < cfg.window:
+            raise ValueError(
+                f"{cfg.name}: cache_len {self.ecfg.cache_len} < local-"
+                f"attention window {cfg.window}; the rolling KV ring and the "
+                f"decode slot index (pos % window) would disagree")
+        if cfg.is_encdec and self.ecfg.cache_len > cfg.max_decode_len:
+            raise ValueError(
+                f"{cfg.name}: cache_len {self.ecfg.cache_len} exceeds the "
+                f"learned decoder position table ({cfg.max_decode_len})")
         self.pool = pool
         self.policy = policy or uniform_policy(1)
         self.params = (params if params is not None
@@ -106,6 +130,7 @@ class ServeEngine:
         self.active: dict[int, set[int]] = {}      # rid -> live slot ids
         self.completed: dict[int, list[int]] = {}  # rid -> delivered tokens
         self.requests: dict[int, Request] = {}
+        self._completed_order: collections.deque[int] = collections.deque()
         self.step_no = 0
         self.interval = DynamicInterval(
             gamma_s=self.ecfg.snapshot_gamma, lam_min=self.ecfg.lam_min,
@@ -115,7 +140,8 @@ class ServeEngine:
         cache_len = self.ecfg.cache_len
         self.cache = lm.init_cache(cfg, pool.n_slots, cache_len)
         self.axes = cache_batch_axes(cfg, cache_len)
-        self._serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        self._serve = jax.jit(make_serve_step(cfg, cache_axes=self.axes),
+                              donate_argnums=(1,))
         self._get = jax.jit(
             lambda cache, sid: slot_get(cache, self.axes, sid))
         self._set = jax.jit(
@@ -133,11 +159,20 @@ class ServeEngine:
     def submit(self, req: Request) -> int:
         """Enqueue a request; returns its replication count."""
         bucket = prompt_bucket(req.prompt_len)
-        if bucket + req.max_new_tokens > self.ecfg.cache_len:
+        offset = self.cfg.n_image_tokens or 0
+        if offset + bucket + req.max_new_tokens > self.ecfg.cache_len:
             raise ValueError(
-                f"request {req.rid}: bucket {bucket} + max_new "
-                f"{req.max_new_tokens} exceeds cache_len "
+                f"request {req.rid}: image tokens {offset} + bucket {bucket} "
+                f"+ max_new {req.max_new_tokens} exceeds cache_len "
                 f"{self.ecfg.cache_len}")
+        if self.cfg.is_encdec and req.frames is None:
+            raise ValueError(
+                f"request {req.rid}: {self.cfg.name} needs per-request "
+                f"encoder frames")
+        if offset and req.image_embeds is None:
+            raise ValueError(
+                f"request {req.rid}: {self.cfg.name} needs per-request "
+                f"image embeds")
         self.requests[req.rid] = req
         self.metrics.register(req)
         rep = self.policy.rep_for(req)
@@ -156,13 +191,27 @@ class ServeEngine:
                 if slot.busy:
                     self._kill_copy(slot, resubmit_if_last=True)
 
+    def _release(self, slot: _Slot) -> None:
+        """Free a slot and scrub its decode registers: a freed slot's stale
+        ``rid``/``pos``/``last_token`` must never reach the serve step (its
+        cache row is additionally masked out of the batched write)."""
+        slot.busy = False
+        slot.rid = -1
+        slot.copy_id = 0
+        slot.pos = 0
+        slot.last_token = 0
+        slot.max_new = 0
+        slot.since_snapshot = 0
+        slot.req = None
+        slot.tokens = []
+
     def _kill_copy(self, slot: _Slot, *, resubmit_if_last: bool) -> None:
         rid = slot.rid
         live = self.active.get(rid, set())
         live.discard(slot.sid)
-        slot.busy = False
-        slot.req = None
-        slot.tokens = []
+        if not live:
+            self.active.pop(rid, None)   # prune: empty sets must not linger
+        self._release(slot)
         if not resubmit_if_last or rid in self.completed:
             return
         # resubmit only when every copy has failed AND none is still queued
@@ -191,14 +240,30 @@ class ServeEngine:
             if item is not None:
                 self._start(slot, item, t)
 
-    def _prefill(self, bucket: int):
-        fn = self._prefill_fns.get(bucket)
+    def _prefill(self, seq: int):
+        """Jitted prefill keyed by prompt length.  Dense/MoE/enc-dec/VLM key
+        on the power-of-two bucket; the recurrent families key on the exact
+        prompt length (one compile per distinct length — the price of
+        padding-unsafe state)."""
+        fn = self._prefill_fns.get(seq)
         if fn is None:
             fn = jax.jit(make_prefill_step(
                 self.cfg, self.ecfg.cache_len,
-                q_chunk=min(self.ecfg.q_chunk, bucket), with_last_idx=True))
-            self._prefill_fns[bucket] = fn
+                q_chunk=min(self.ecfg.q_chunk, seq), with_last_idx=True))
+            self._prefill_fns[seq] = fn
         return fn
+
+    def _prefill_batch(self, req: Request, seq: int) -> dict:
+        padded = np.zeros((1, seq), np.int32)
+        padded[0, :req.prompt_len] = np.asarray(req.prompt, np.int32)
+        batch = {"tokens": jnp.asarray(padded)}
+        if self.cfg.is_encdec:
+            batch["frames"] = jnp.asarray(
+                np.asarray(req.frames, np.float32))[None]
+        if self.cfg.n_image_tokens:
+            batch["image_embeds"] = jnp.asarray(
+                np.asarray(req.image_embeds, np.float32))[None]
+        return batch
 
     def _start(self, slot: _Slot, item: WorkItem, t: int) -> None:
         req = item.req
@@ -219,18 +284,21 @@ class ServeEngine:
             self.metrics.restores += 1
         else:
             p = req.prompt_len
-            bucket = prompt_bucket(p)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :p] = np.asarray(req.prompt, np.int32)
-            logits, row1 = self._prefill(bucket)(
-                self.params, {"tokens": jnp.asarray(padded)},
-                jnp.asarray([p - 1], jnp.int32))
+            offset = self.cfg.n_image_tokens or 0
+            # recurrent state treats every position as a state update, so pad
+            # positions are not maskable after the fact: prefill at the exact
+            # prompt length instead of the padded bucket
+            exact = self.cfg.rwkv or self.cfg.rglru
+            seq = p if exact else prompt_bucket(p)
+            logits, row1 = self._prefill(seq)(
+                self.params, self._prefill_batch(req, seq),
+                jnp.asarray([offset + p - 1], jnp.int32))
             self.cache = self._insert(self.cache, slot.sid, row1)
             tok = int(np.argmax(np.asarray(logits[0])))
-            slot.pos = p
+            slot.pos = offset + p
             slot.tokens = [tok]
             slot.last_token = tok
-            self.metrics.prefill_tokens += bucket
+            self.metrics.prefill_tokens += seq + offset
         if len(slot.tokens) >= slot.max_new:
             self._finish(slot, t)
 
@@ -241,11 +309,14 @@ class ServeEngine:
             return
         toks = np.zeros((len(self.slots), 1), np.int32)
         poss = np.zeros((len(self.slots),), np.int32)
+        live = np.zeros((len(self.slots),), bool)
         for s in self.slots:
             toks[s.sid, 0] = s.last_token
             poss[s.sid] = s.pos
+            live[s.sid] = s.busy
         nxt, _, self.cache = self._serve(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss))
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
+            jnp.asarray(live))
         nxt = np.asarray(nxt)
         for s in busy:
             tok = int(nxt[s.sid, 0])
@@ -265,11 +336,15 @@ class ServeEngine:
         self.queue.cancel(rid)
         self.store.drop(rid)
         for sid in sorted(self.active.get(rid, set())):
-            s = self.slots[sid]
-            s.busy = False           # late replicas: tokens become wastage
-            s.req = None
-            s.tokens = []
+            # late replicas: their tokens become wastage
+            self._release(self.slots[sid])
         self.active.pop(rid, None)
+        self._completed_order.append(rid)
+        while len(self._completed_order) > self.ecfg.retain_completed:
+            old = self._completed_order.popleft()
+            self.completed.pop(old, None)
+            self.requests.pop(old, None)
+            self.store.drop(old)
 
     # -- snapshot cadence (Lemma 3.1 online) ---------------------------------
     def _snapshot_every(self) -> int:

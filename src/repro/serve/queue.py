@@ -31,7 +31,17 @@ __all__ = [
 
 @dataclasses.dataclass
 class Request:
-    """One inference request: prompt tokens + a decode budget + an SLO."""
+    """One inference request: prompt tokens + a decode budget + an SLO.
+
+    ``frames`` / ``image_embeds`` are per-request side inputs for the
+    encoder-decoder and multimodal families: the audio-frontend frame
+    embeddings (n_frames, d_model) and the vision-frontend patch embeddings
+    (n_image_tokens, d_model).  They are consumed at prefill — the derived
+    per-slot state (cross-attention K/V, image-token KV rows) lives inside
+    the slot's cache row afterwards, so snapshots and freed-slot reuse carry
+    it automatically; a from-scratch resubmission re-prefills from the arrays
+    kept here.
+    """
 
     rid: int
     prompt: np.ndarray              # (P,) int32 token ids
@@ -39,6 +49,8 @@ class Request:
     arrival: int = 0                # engine step at which the request arrived
     deadline: int | None = None     # absolute step for SLO-attainment (goodput)
     priority: float = 1.0
+    frames: np.ndarray | None = None        # (n_frames, d_model) enc-dec
+    image_embeds: np.ndarray | None = None  # (n_image_tokens, d_model) VLM
 
     @property
     def prompt_len(self) -> int:

@@ -1,0 +1,69 @@
+"""Static one-shot greedy reference decoder for token-parity checks.
+
+Decodes each request independently — batch=1, exact-length prefill (no
+bucket padding), scalar-position decode loop — through the same
+``lm.prefill`` / ``lm.decode_step`` model code the engine jits, but via a
+*different* batching path: no slot reuse, no padding, no per-slot position
+vectors, no idle-row masking.  Token-for-token agreement between
+:func:`greedy_reference` and :class:`~repro.serve.engine.ServeEngine` is
+therefore evidence that the engine's continuous-batching machinery (bucket
+padding + ``last_idx``, freed-slot reuse, masked cache commits, snapshot
+restore) is output-transparent for every model family.
+
+Exactness argument: masked attention scores are set to ``-1e30``, which
+underflows to exactly ``0.0`` after the softmax ``exp`` — padded keys
+contribute nothing, bit-for-bit, so bucketed and exact-length prefill agree
+on every admitted position (and the recurrent families never see padding in
+either path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.steps import make_prefill_step, make_serve_step
+from repro.models.config import ModelConfig
+
+__all__ = ["greedy_reference"]
+
+
+def _prefill_batch(cfg: ModelConfig, req) -> dict:
+    batch = {"tokens": jnp.asarray(
+        np.asarray(req.prompt, np.int32))[None]}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            np.asarray(req.frames, np.float32))[None]
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = jnp.asarray(
+            np.asarray(req.image_embeds, np.float32))[None]
+    return batch
+
+
+def greedy_reference(params, cfg: ModelConfig, requests, cache_len: int, *,
+                     q_chunk: int = 64) -> dict[int, list[int]]:
+    """Greedy tokens for each request, rid -> tokens, batch=1 static decode.
+
+    ``cache_len`` should match the engine's so both paths attend over the
+    same cache geometry (same rolling-window size for RG-LRU hybrids).
+    """
+    serve = jax.jit(make_serve_step(cfg))
+    prefills: dict[int, object] = {}
+    out: dict[int, list[int]] = {}
+    offset = cfg.n_image_tokens or 0
+    for req in requests:
+        p = req.prompt_len
+        fn = prefills.get(p)
+        if fn is None:
+            fn = jax.jit(make_prefill_step(cfg, cache_len,
+                                           q_chunk=min(q_chunk, p)))
+            prefills[p] = fn
+        logits, cache = fn(params, _prefill_batch(cfg, req))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        tokens = [int(np.asarray(tok)[0, 0])]
+        for i in range(req.max_new_tokens - 1):
+            tok, _, cache = serve(params, cache, tok,
+                                  jnp.int32(offset + p + i))
+            tokens.append(int(np.asarray(tok)[0, 0]))
+        out[req.rid] = tokens
+    return out

@@ -149,14 +149,22 @@ class WorkerPool:
         self.forced_failures.setdefault(step, []).append(wid)
 
     def step_failures(self, step: int) -> list[int]:
-        """Workers that fail at ``step``; marks them down for MTTR steps."""
+        """Workers that fail at ``step``; marks them down for MTTR steps.
+
+        A sampled failure landing while its worker is already down (mid-MTTR)
+        is *deferred* to the repair step via :meth:`FaultInjector.defer`
+        rather than silently dropped — the fault strikes again the moment the
+        worker comes back up.
+        """
         failed = []
         for w in self.workers:
             inj = self.injectors[w.wid]
             hit = w.wid in self.forced_failures.get(step, ())
-            if inj is not None and w.is_up(step) and inj.fails_at(step):
-                inj.fail_steps.discard(step)
-                hit = True
+            if inj is not None:
+                if w.is_up(step):
+                    hit = inj.consume(step) or hit
+                else:
+                    inj.defer(step, w.down_until)
             if hit and w.is_up(step):
                 w.down_until = step + self.mttr_steps
                 failed.append(w.wid)

@@ -8,17 +8,28 @@ from repro.configs import get_config
 from repro.models import lm
 from repro.serve import (AdmissionQueue, EngineConfig, Request, ServeEngine,
                          ServeMetrics, WorkItem, WorkerPool, crch_policy,
-                         engine_supported, prompt_bucket, request_class,
-                         request_features, uniform_policy)
+                         engine_supported, greedy_reference, prompt_bucket,
+                         request_class, request_features, uniform_policy)
 from repro.serve.snapshot import cache_batch_axes, slot_get, slot_set
 
 
-def _req(rid, plen, newt, *, arrival=0, deadline=None, vocab=256, seed=0):
+def _req(rid, plen, newt, *, arrival=0, deadline=None, vocab=256, seed=0,
+         cfg=None):
     rng = np.random.default_rng(seed * 7919 + rid)
+    frames = embeds = None
+    if cfg is not None:
+        vocab = cfg.vocab_size
+        if cfg.is_encdec:
+            frames = rng.normal(size=(cfg.n_frames, cfg.d_model)) \
+                        .astype(np.float32)
+        if cfg.n_image_tokens:
+            embeds = rng.normal(size=(cfg.n_image_tokens, cfg.d_model)) \
+                        .astype(np.float32)
     return Request(rid=rid,
                    prompt=rng.integers(1, vocab, plen,
                                        dtype=np.int64).astype(np.int32),
-                   max_new_tokens=newt, arrival=arrival, deadline=deadline)
+                   max_new_tokens=newt, arrival=arrival, deadline=deadline,
+                   frames=frames, image_embeds=embeds)
 
 
 # ---------------------------------------------------------------- queue ----
@@ -85,8 +96,12 @@ def test_worker_pool_failure_and_repair():
 
 # -------------------------------------------------------------- snapshot ----
 
-def test_slot_get_set_roundtrip():
-    cfg = get_config("olmo-1b", tiny=True)
+@pytest.mark.parametrize("arch", ["olmo-1b", "rwkv6-3b", "recurrentgemma-2b",
+                                  "whisper-small"])
+def test_slot_get_set_roundtrip(arch):
+    """Row extraction/insertion must be exact for every cache pytree shape:
+    dense KV, RWKV recurrent state, RG-LRU hybrid, enc-dec cross-KV."""
+    cfg = get_config(arch, tiny=True)
     cache = lm.init_cache(cfg, 3, 16)
     axes = cache_batch_axes(cfg, 16)
     marked = jax.tree.map(lambda l: l + 1.0, cache)
@@ -129,16 +144,25 @@ def tiny_setup():
     return cfg, params
 
 
-def _run_engine(cfg, params, reqs, *, fail=None, snapshot_lambda=4,
-                policy=None):
-    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+def _cache_len_for(cfg, reqs):
+    offset = cfg.n_image_tokens or 0
+    cache_len = max(offset + prompt_bucket(r.prompt_len) + r.max_new_tokens
                     for r in reqs)
+    if cfg.rglru and cfg.window:
+        cache_len = max(cache_len, cfg.window)
+    return cache_len
+
+
+def _run_engine(cfg, params, reqs, *, fail=None, snapshot_lambda=4,
+                policy=None, retain_completed=4096):
+    cache_len = _cache_len_for(cfg, reqs)
     pool = WorkerPool(2, 2, mtbf_steps=0.0, mttr_steps=6, seed=0)
     if fail is not None:
         pool.force_failure(fail[0], wid=fail[1])
     engine = ServeEngine(
         cfg, EngineConfig(cache_len=cache_len, q_chunk=32,
-                          snapshot_lambda=snapshot_lambda),
+                          snapshot_lambda=snapshot_lambda,
+                          retain_completed=retain_completed),
         pool=pool, policy=policy or uniform_policy(1), params=params)
     for r in reqs:
         engine.submit(r)
@@ -185,6 +209,104 @@ def test_engine_rejects_oversized_request(tiny_setup):
         engine.submit(_req(1, 20, 16, vocab=cfg.vocab_size))
 
 
-def test_engine_supported_gates_recurrent_families():
-    ok, why = engine_supported(get_config("rwkv6-3b", tiny=True))
-    assert not ok and why
+def test_engine_supports_all_families():
+    """The family gate is gone: the continuous engine drives every arch."""
+    for arch in ("olmo-1b", "rwkv6-3b", "recurrentgemma-2b",
+                 "whisper-small", "llava-next-mistral-7b"):
+        ok, why = engine_supported(get_config(arch, tiny=True))
+        assert ok, f"{arch}: {why}"
+
+
+def test_engine_idle_slot_cache_row_untouched(tiny_setup):
+    """A freed slot's cache row must stay bit-identical while other slots
+    keep decoding — stale last_token/pos must be masked out of the batched
+    cache write (regression: recurrent state accumulates corruption)."""
+    cfg, params = tiny_setup
+    reqs = [_req(0, 8, 3, vocab=cfg.vocab_size, seed=9),
+            _req(1, 8, 24, vocab=cfg.vocab_size, seed=9)]
+    cache_len = _cache_len_for(cfg, reqs)
+    pool = WorkerPool(2, 2, mtbf_steps=0.0, seed=0)
+    engine = ServeEngine(cfg, EngineConfig(cache_len=cache_len, q_chunk=32),
+                         pool=pool, policy=uniform_policy(1), params=params)
+    for r in reqs:
+        engine.submit(r)
+    while 0 not in engine.completed:
+        engine.step()
+    freed = [s.sid for s in engine.slots if not s.busy]
+    assert freed and any(s.busy for s in engine.slots)
+    before = {sid: jax.device_get(engine._get(engine.cache, sid))
+              for sid in freed}
+    for _ in range(6):
+        engine.step()
+    for sid in freed:
+        after = jax.device_get(engine._get(engine.cache, sid))
+        for a, b in zip(jax.tree.leaves(before[sid]),
+                        jax.tree.leaves(after)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_worker_pool_mid_mttr_failure_deferred_not_lost():
+    """A sampled failure landing while the worker is already down must not
+    be silently absorbed: it strikes again at repair completion."""
+    pool = WorkerPool(1, 1, mtbf_steps=1e9, mttr_steps=10, seed=0)
+    inj = pool.injectors[0]
+    inj.fail_steps = {5, 8}
+    assert pool.step_failures(5) == [0]
+    assert not pool.is_up(0, 8)
+    assert pool.step_failures(8) == []      # mid-MTTR: deferred, not dropped
+    assert 8 not in inj.fail_steps
+    assert 15 in inj.fail_steps             # rescheduled to repair step
+    assert pool.step_failures(15) == [0]    # strikes again once repaired
+
+
+def test_engine_state_bounded_over_many_requests(tiny_setup):
+    """A long-running service must not grow host state without bound:
+    completed/request/snapshot entries are evicted FIFO beyond
+    ``retain_completed`` and ``active`` never retains empty sets."""
+    cfg, params = tiny_setup
+    n = 1_000
+    reqs = [_req(i, 6, 2, vocab=cfg.vocab_size, seed=11) for i in range(n)]
+    engine = _run_engine(cfg, params, reqs, retain_completed=64)
+    assert engine.metrics.summary(engine.step_no)["completed"] == n
+    assert len(engine.completed) <= 64
+    assert len(engine.requests) <= 64
+    assert len(engine._completed_order) <= 64
+    assert engine.active == {}
+    assert len(engine.store) == 0
+    # the newest requests are the retained ones
+    assert max(engine.completed) == n - 1
+
+
+ALL_ARCHS = ("rwkv6-3b", "recurrentgemma-2b", "whisper-small",
+             "llava-next-mistral-7b")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_engine_token_parity_with_static_reference(arch):
+    """Continuous batching must be output-transparent for every family:
+    engine tokens == batch=1 exact-length static greedy tokens."""
+    cfg = get_config(arch, tiny=True)
+    params = lm.init_params(jax.random.key(0), cfg)
+    reqs = [_req(i, 5 + 2 * i, 8, seed=13, cfg=cfg) for i in range(4)]
+    engine = _run_engine(cfg, params, reqs)
+    assert len(engine.completed) == len(reqs)
+    ref = greedy_reference(params, cfg, reqs, _cache_len_for(cfg, reqs),
+                           q_chunk=32)
+    for r in reqs:
+        assert engine.output(r.rid) == ref[r.rid], r.rid
+
+
+def test_engine_rwkv_failure_resume_matches_failure_free():
+    """Recurrent-state snapshot restore must reproduce the failure-free
+    greedy tokens exactly (the state is NOT reconstructible from the KV
+    overwrite argument — the snapshot itself must be exact)."""
+    cfg = get_config("rwkv6-3b", tiny=True)
+    params = lm.init_params(jax.random.key(1), cfg)
+    reqs = [_req(i, 7 + 3 * i, 16, seed=17, cfg=cfg) for i in range(4)]
+    clean = _run_engine(cfg, params, reqs)
+    faulty = _run_engine(cfg, params, reqs, fail=(9, 0))
+    assert len(faulty.completed) == len(reqs)
+    assert faulty.metrics.failures >= 1
+    assert faulty.metrics.resubmissions >= 1
+    for rid in clean.completed:
+        assert clean.completed[rid] == faulty.completed[rid], rid
