@@ -1,0 +1,50 @@
+"""repro.chaos — deterministic multi-fault injection with record/replay.
+
+The paper's premise is surviving "precarious environments", but a single
+fault class (whole-host crash) exercises only one recovery path.  This
+package widens the fault model into a *taxonomy* — see
+:mod:`repro.chaos.faults` for the class-by-class list and the recovery path
+each one exercises — and makes every chaos run exactly reproducible:
+
+* **Taxonomy**: ``host_crash``, ``slowdown`` (straggler), ``capacity_loss``
+  (k workers down for an MTTR window), ``ckpt_corrupt`` (torn training
+  checkpoint shard), ``snapshot_corrupt`` (corrupt decode snapshot), and
+  ``nan_poison`` (NaN/Inf train-step output).
+* **Record**: ``sample_trace(profile, horizon=..., seed=...)`` draws a
+  :class:`~repro.chaos.faults.FaultTrace` from the Section 4.1 Weibull/
+  log-normal distributions (per-class MTBF scaled by the stable / normal /
+  unstable profile) and ``trace.save(path)`` serializes it to JSON.
+* **Replay**: ``FaultTrace.load(path)`` + :class:`ChaosEngine` re-fires the
+  exact same events — every event carries its own step, targets, duration,
+  and corruption seed, so no RNG runs at replay time and two runs of
+  ``benchmarks/chaos_matrix.py`` over one trace produce identical grids.
+
+Consumers: ``repro.ft.coordinator.TrainingCoordinator(chaos=...)`` and
+``repro.serve.ServeEngine(chaos=...)`` accept a :class:`ChaosEngine`;
+``launch/train.py`` and ``launch/serve.py`` expose it as ``--chaos PROFILE``
+/ ``--chaos-record PATH`` / ``--chaos-trace PATH``.
+"""
+from .faults import (CAPACITY_LOSS, CHAOS_PROFILES, CKPT_CORRUPT,
+                     FAULT_KINDS, HOST_CRASH, NAN_POISON, SERVE_KINDS,
+                     SLOWDOWN, SNAPSHOT_CORRUPT, TRAIN_KINDS, ChaosEngine,
+                     FaultEvent, FaultTrace, corrupt_checkpoint_shard,
+                     flip_bytes, sample_trace)
+
+__all__ = [
+    "CAPACITY_LOSS",
+    "CHAOS_PROFILES",
+    "CKPT_CORRUPT",
+    "ChaosEngine",
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultTrace",
+    "HOST_CRASH",
+    "NAN_POISON",
+    "SERVE_KINDS",
+    "SLOWDOWN",
+    "SNAPSHOT_CORRUPT",
+    "TRAIN_KINDS",
+    "corrupt_checkpoint_shard",
+    "flip_bytes",
+    "sample_trace",
+]

@@ -1,0 +1,270 @@
+"""Fault taxonomy, deterministic sampling, and record/replay traces.
+
+The taxonomy (one constant per fault class; ``FAULT_KINDS`` is the full
+list):
+
+``host_crash``
+    A whole worker/host dies mid-step (the paper's original fault model).
+    Recovery path: checkpoint/snapshot restore + resubmission.
+``slowdown``
+    A transient straggler: the target runs slower for ``duration`` steps but
+    loses no state.  Recovery path: stalled decode slots resume where they
+    left off (serving) / virtual-time penalty (training).
+``capacity_loss``
+    ``len(targets)`` workers go down simultaneously for ``duration`` steps
+    (an MTTR window).  Recovery path: deadline-aware load shedding in the
+    admission queue — degraded-mode serving instead of unbounded queueing.
+``ckpt_corrupt``
+    A torn/corrupt shard in the newest committed training checkpoint.
+    Recovery path: ``CheckpointStore.restore`` quarantines the bad shard and
+    falls back to the newest checkpoint whose shards verify.
+``snapshot_corrupt``
+    A stored decode snapshot is corrupted in host memory.  Recovery path:
+    the engine detects the checksum mismatch at restore time and falls back
+    to a from-scratch re-prefill.
+``nan_poison``
+    A train-step output is poisoned with NaN/Inf.  Recovery path: the
+    coordinator's NaN guard rejects the update and skips the poisoned batch.
+
+Trace format (``FaultTrace.to_json``)::
+
+    {"version": 1,
+     "meta": {"profile": "unstable", "seed": 0, "horizon": 400,
+              "n_targets": 4},
+     "events": [{"step": 17, "kind": "host_crash", "targets": [2],
+                 "duration": 12, "seed": 1234567}, ...]}
+
+Every event is fully explicit — step, kind, targets, duration, and a
+per-event RNG seed that pins which bytes a corruption flips — so replaying a
+trace through :class:`ChaosEngine` reproduces a chaos run *bit-identically*.
+To reproduce a recorded run::
+
+    trace = FaultTrace.load("chaos_trace.json")
+    engine = ServeEngine(cfg, ecfg, pool=pool, chaos=ChaosEngine(trace), ...)
+
+or from the CLI: ``python -m repro.launch.serve --chaos-trace chaos.json``.
+``sample_trace`` draws inter-arrival gaps per fault class from the paper's
+Section 4.1 Weibull MTBF and log-normal MTTR distributions (in step units,
+scaled per :data:`CHAOS_PROFILES` environment), entirely from one seed.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+__all__ = [
+    "HOST_CRASH",
+    "SLOWDOWN",
+    "CAPACITY_LOSS",
+    "CKPT_CORRUPT",
+    "SNAPSHOT_CORRUPT",
+    "NAN_POISON",
+    "FAULT_KINDS",
+    "SERVE_KINDS",
+    "TRAIN_KINDS",
+    "CHAOS_PROFILES",
+    "FaultEvent",
+    "FaultTrace",
+    "ChaosEngine",
+    "sample_trace",
+    "flip_bytes",
+    "corrupt_checkpoint_shard",
+]
+
+HOST_CRASH = "host_crash"
+SLOWDOWN = "slowdown"
+CAPACITY_LOSS = "capacity_loss"
+CKPT_CORRUPT = "ckpt_corrupt"
+SNAPSHOT_CORRUPT = "snapshot_corrupt"
+NAN_POISON = "nan_poison"
+
+FAULT_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, CKPT_CORRUPT,
+               SNAPSHOT_CORRUPT, NAN_POISON)
+#: kinds each layer consumes (the other layer's kinds are no-ops there)
+SERVE_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, SNAPSHOT_CORRUPT)
+TRAIN_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, CKPT_CORRUPT, NAN_POISON)
+
+# Per-class MTBF in steps, mirroring repro.serve.replicas.SERVE_ENVIRONMENTS:
+# stability drops -> every fault class strikes more often and repairs slower.
+CHAOS_PROFILES: dict[str, dict] = {
+    "stable": {
+        "shape": 12.5, "mttr_steps": 8,
+        "mtbf": {HOST_CRASH: 800.0, SLOWDOWN: 600.0, CAPACITY_LOSS: 4000.0,
+                 SNAPSHOT_CORRUPT: 3000.0, CKPT_CORRUPT: 3000.0,
+                 NAN_POISON: 2500.0},
+    },
+    "normal": {
+        "shape": 12.0, "mttr_steps": 16,
+        "mtbf": {HOST_CRASH: 200.0, SLOWDOWN: 150.0, CAPACITY_LOSS: 1000.0,
+                 SNAPSHOT_CORRUPT: 800.0, CKPT_CORRUPT: 800.0,
+                 NAN_POISON: 600.0},
+    },
+    "unstable": {
+        "shape": 11.5, "mttr_steps": 24,
+        "mtbf": {HOST_CRASH: 30.0, SLOWDOWN: 45.0, CAPACITY_LOSS: 150.0,
+                 SNAPSHOT_CORRUPT: 120.0, CKPT_CORRUPT: 120.0,
+                 NAN_POISON: 90.0},
+    },
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  Fully explicit so replay needs no RNG."""
+
+    step: int
+    kind: str
+    targets: tuple[int, ...] = ()
+    duration: int = 0
+    seed: int = 0
+
+    def to_json(self) -> dict:
+        return {"step": self.step, "kind": self.kind,
+                "targets": list(self.targets), "duration": self.duration,
+                "seed": self.seed}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FaultEvent":
+        return cls(step=int(d["step"]), kind=str(d["kind"]),
+                   targets=tuple(int(t) for t in d.get("targets", ())),
+                   duration=int(d.get("duration", 0)),
+                   seed=int(d.get("seed", 0)))
+
+
+@dataclasses.dataclass
+class FaultTrace:
+    """An ordered, serializable fault schedule (the record/replay unit)."""
+
+    events: list[FaultEvent]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def kinds(self) -> set[str]:
+        return {ev.kind for ev in self.events}
+
+    def to_json(self) -> dict:
+        return {"version": 1, "meta": self.meta,
+                "events": [ev.to_json() for ev in self.events]}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FaultTrace":
+        return cls(events=[FaultEvent.from_json(e) for e in d["events"]],
+                   meta=dict(d.get("meta", {})))
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "FaultTrace":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def sample_trace(profile: str | dict, *, horizon: int, n_targets: int = 1,
+                 seed: int = 0, kinds: tuple[str, ...] | None = None
+                 ) -> FaultTrace:
+    """Deterministically sample a :class:`FaultTrace` from one seed.
+
+    Per fault class, inter-arrival gaps are Weibull with the profile's
+    per-class MTBF scale (paper Section 4.1); outage/slowdown durations are
+    log-normal around the profile's MTTR.  ``kinds`` restricts sampling to a
+    subset of the taxonomy (e.g. one cell of the chaos matrix).
+    """
+    spec = CHAOS_PROFILES[profile] if isinstance(profile, str) else profile
+    rng = np.random.default_rng(seed)
+    events: list[FaultEvent] = []
+    for kind in (kinds or FAULT_KINDS):
+        mtbf = float(spec["mtbf"].get(kind, 0.0))
+        if mtbf <= 0:
+            continue
+        t = rng.uniform(0, mtbf)
+        while t < horizon:
+            dur = max(1, int(round(rng.lognormal(
+                np.log(max(spec["mttr_steps"], 1.0)), 0.25))))
+            k = 1
+            if kind == CAPACITY_LOSS and n_targets > 1:
+                k = int(rng.integers(1, n_targets))
+            targets = tuple(sorted(
+                rng.choice(max(n_targets, 1), size=min(k, max(n_targets, 1)),
+                           replace=False).tolist()))
+            events.append(FaultEvent(
+                step=int(t), kind=kind, targets=targets, duration=dur,
+                seed=int(rng.integers(0, 2**31 - 1))))
+            t += max(1.0, mtbf * rng.weibull(spec["shape"]))
+    events.sort(key=lambda e: (e.step, e.kind, e.targets))
+    meta = {"profile": profile if isinstance(profile, str) else "custom",
+            "seed": seed, "horizon": horizon, "n_targets": n_targets,
+            "kinds": list(kinds or FAULT_KINDS)}
+    return FaultTrace(events=events, meta=meta)
+
+
+class ChaosEngine:
+    """Replays a :class:`FaultTrace` against a training or serving run.
+
+    The consumer (``TrainingCoordinator`` / ``ServeEngine``) calls
+    :meth:`events_at` once per step; each event fires exactly once, in trace
+    order, so two runs over the same trace see identical fault sequences.
+    """
+
+    def __init__(self, trace: FaultTrace):
+        self.trace = trace
+        self._by_step: dict[int, list[FaultEvent]] = {}
+        for ev in trace.events:
+            self._by_step.setdefault(ev.step, []).append(ev)
+        self.applied: list[FaultEvent] = []
+        self.applied_by_kind: collections.Counter = collections.Counter()
+
+    def events_at(self, step: int) -> list[FaultEvent]:
+        evs = self._by_step.pop(step, [])
+        self.applied.extend(evs)
+        for ev in evs:
+            self.applied_by_kind[ev.kind] += 1
+        return evs
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._by_step.values())
+
+
+# -- corruption helpers (byte-level, seed-deterministic) ---------------------
+def flip_bytes(path: str, seed: int, n: int = 1) -> bool:
+    """XOR-flip ``n`` payload bytes of ``path`` (skipping any format header
+    region by flipping in the back half).  Returns False on an empty file."""
+    with open(path, "r+b") as f:
+        data = bytearray(f.read())
+        if not data:
+            return False
+        rng = np.random.default_rng(seed)
+        lo = len(data) // 2
+        for _ in range(n):
+            data[int(rng.integers(lo, len(data)))] ^= 0xFF
+        f.seek(0)
+        f.write(data)
+        f.truncate()
+    return True
+
+
+def corrupt_checkpoint_shard(store, seed: int) -> str | None:
+    """Flip bytes in one shard of the *newest* committed checkpoint of a
+    ``repro.ft.checkpoint.CheckpointStore``.  Victim selection is a pure
+    function of ``seed``.  Returns the corrupted path (None if no commit)."""
+    steps = store.committed_steps()
+    if not steps:
+        return None
+    index = store.read_index(steps[-1])
+    names = sorted(index["leaves"])
+    if not names:
+        return None
+    meta = index["leaves"][names[seed % len(names)]]
+    if not os.path.exists(meta["file"]):
+        return None
+    flip_bytes(meta["file"], seed)
+    return meta["file"]

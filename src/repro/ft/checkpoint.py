@@ -14,21 +14,41 @@ The paper's checkpoint design (Section 3.1.3 / 4.1) adapted to training:
   shared counters; a content-addressed single-writer index needs no
   coherence protocol).
 
+Robustness (the ``repro.chaos`` ``ckpt_corrupt`` recovery path):
+
+* the store retains the last ``keep`` committed indices (older indices and
+  their shard directories are pruned after each commit);
+* ``restore`` walks committed indices newest -> oldest and returns the
+  newest checkpoint whose shards *all* verify; a shard that fails its
+  content hash (or is missing/unreadable) is **quarantined** — moved to
+  ``store_dir/quarantine/`` with a JSON-logged reason — and the failed
+  index is retired so later restores skip it.  Only when every committed
+  checkpoint fails does ``restore`` raise.
+* async-save failures are never silent: an exception raised inside the
+  daemon ``_write`` thread is captured and re-raised from :meth:`wait`
+  (and therefore from the next :meth:`save`/:meth:`restore`), instead of
+  leaving a stale pointer with no signal.
+
 Async mode overlaps serialization with compute and only the pointer flip is
 synchronous -- the training analogue of "synchronized light-weight
 checkpoints".
 """
 from __future__ import annotations
 
+import glob
 import hashlib
 import json
+import logging
 import os
+import shutil
 import threading
 
 import jax
 import numpy as np
 
 __all__ = ["CheckpointStore"]
+
+log = logging.getLogger(__name__)
 
 
 def _leaf_paths(tree):
@@ -42,22 +62,64 @@ def _leaf_paths(tree):
 
 
 class CheckpointStore:
-    """File-backed pointer checkpoint store."""
+    """File-backed pointer checkpoint store with fallback restore."""
 
-    def __init__(self, root: str, *, n_hosts: int = 1):
+    def __init__(self, root: str, *, n_hosts: int = 1, keep: int = 3):
         self.root = root
         self.n_hosts = n_hosts
+        self.keep = max(1, int(keep))
         os.makedirs(root, exist_ok=True)
         self._async_thread: threading.Thread | None = None
+        self._async_exc: BaseException | None = None
+        self.quarantined: list[dict] = []
+        # committed indices skipped during the most recent restore()
+        self.last_restore_fallbacks = 0
 
     # -- paths ---------------------------------------------------------------
-    def _index_path(self) -> str:
-        return os.path.join(self.root, "INDEX.json")
+    def _index_path(self, step: int) -> str:
+        return os.path.join(self.root, f"index_{step:09d}.json")
 
     def _host_dir(self, host: int, step: int) -> str:
         d = os.path.join(self.root, f"host_{host:03d}", f"step_{step:09d}")
         os.makedirs(d, exist_ok=True)
         return d
+
+    def _quarantine_dir(self) -> str:
+        d = os.path.join(self.root, "quarantine")
+        os.makedirs(d, exist_ok=True)
+        return d
+
+    # -- committed-index bookkeeping -----------------------------------------
+    def _list_committed(self) -> list[int]:
+        steps = []
+        for f in os.listdir(self.root):
+            if f.startswith("index_") and f.endswith(".json"):
+                try:
+                    steps.append(int(f[len("index_"):-len(".json")]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def committed_steps(self) -> list[int]:
+        """Steps with a committed index, oldest first."""
+        self.wait()
+        return self._list_committed()
+
+    def read_index(self, step: int) -> dict:
+        with open(self._index_path(step)) as f:
+            return json.load(f)
+
+    def _prune(self) -> None:
+        # index first: a crash mid-prune must never leave an index pointing
+        # at deleted shards
+        for step in self._list_committed()[:-self.keep]:
+            try:
+                os.remove(self._index_path(step))
+            except OSError:
+                pass
+            for d in glob.glob(os.path.join(
+                    self.root, "host_*", f"step_{step:09d}")):
+                shutil.rmtree(d, ignore_errors=True)
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree, *, extra: dict | None = None,
@@ -82,15 +144,23 @@ class CheckpointStore:
                     "host": host, "file": fpath, "sha1": digest,
                     "shape": list(arr.shape), "dtype": str(arr.dtype),
                 }
-            tmp = self._index_path() + f".tmp{step}"
+            tmp = self._index_path(step) + ".tmp"
             with open(tmp, "w") as f:
                 json.dump(index, f)
-            os.replace(tmp, self._index_path())   # atomic pointer flip
+            os.replace(tmp, self._index_path(step))   # atomic pointer flip
+            self._prune()
             return index
 
         if sync:
             return _write()
-        self._async_thread = threading.Thread(target=_write, daemon=True)
+
+        def _runner() -> None:
+            try:
+                _write()
+            except BaseException as e:   # surfaced from wait(), not lost
+                self._async_exc = e
+
+        self._async_thread = threading.Thread(target=_runner, daemon=True)
         self._async_thread.start()
         return {"step": step, "async": True}
 
@@ -98,32 +168,86 @@ class CheckpointStore:
         if self._async_thread is not None:
             self._async_thread.join()
             self._async_thread = None
+        if self._async_exc is not None:
+            exc, self._async_exc = self._async_exc, None
+            raise exc
 
     # -- restore ---------------------------------------------------------------
     def latest_step(self) -> int | None:
-        self.wait()
-        if not os.path.exists(self._index_path()):
-            return None
-        with open(self._index_path()) as f:
-            return json.load(f)["step"]
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
 
-    def restore(self, like_tree, *, verify: bool = True):
-        """Restore into the structure of ``like_tree`` (lazy per-leaf reads).
-        Returns (tree, step, extra)."""
-        self.wait()
-        with open(self._index_path()) as f:
-            index = json.load(f)
-        leaves, treedef = _leaf_paths(like_tree)
+    def _quarantine(self, path: str, reason: str, step: int) -> None:
+        qdir = self._quarantine_dir()
+        dest = os.path.join(qdir, f"step_{step:09d}__{os.path.basename(path)}")
+        try:
+            os.replace(path, dest)
+        except OSError:
+            dest = None
+        rec = {"step": step, "path": path, "quarantined_to": dest,
+               "reason": reason}
+        self.quarantined.append(rec)
+        with open(os.path.join(qdir, "LOG.jsonl"), "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        log.warning("checkpoint shard quarantined: %s (%s)", path, reason)
+
+    def _read_verified(self, step: int, leaves, verify: bool):
+        index = self.read_index(step)
         out = []
-        for name, leaf in leaves:
-            meta = index["leaves"][name]
+        for name, _ in leaves:
+            meta = index["leaves"].get(name)
+            if meta is None:
+                raise IOError(f"leaf {name} missing from index step {step}")
             with open(meta["file"], "rb") as f:
                 arr = np.load(f)
             if verify:
                 digest = hashlib.sha1(arr.tobytes()).hexdigest()
                 if digest != meta["sha1"]:
+                    self._quarantine(meta["file"],
+                                     f"checksum mismatch for leaf {name}",
+                                     step)
                     raise IOError(f"checksum mismatch for {name} "
                                   f"({meta['file']})")
             out.append(arr)
-        tree = jax.tree_util.tree_unflatten(treedef, out)
-        return tree, index["step"], index["extra"]
+        return out, index
+
+    def restore(self, like_tree, *, verify: bool = True):
+        """Restore into the structure of ``like_tree`` (lazy per-leaf reads).
+
+        Walks committed checkpoints newest -> oldest and returns the newest
+        one whose shards all verify, quarantining bad shards and retiring
+        failed indices along the way.  Raises only when *no* committed
+        checkpoint passes.  Returns (tree, step, extra).
+        """
+        self.wait()
+        leaves, treedef = _leaf_paths(like_tree)
+        steps = self.committed_steps()
+        if not steps:
+            raise FileNotFoundError(
+                f"no committed checkpoint index under {self.root}")
+        self.last_restore_fallbacks = 0
+        errors: list[str] = []
+        for step in reversed(steps):
+            try:
+                out, index = self._read_verified(step, leaves, verify)
+            except Exception as e:   # corrupt/missing shard: fall back
+                errors.append(f"step {step}: {e}")
+                self.last_restore_fallbacks += 1
+                # retire the failed index so later restores skip it
+                try:
+                    os.replace(self._index_path(step), os.path.join(
+                        self._quarantine_dir(), f"index_{step:09d}.json"))
+                except OSError:
+                    pass
+                log.warning("checkpoint step %d failed verification (%s); "
+                            "falling back", step, e)
+                continue
+            if errors:
+                log.warning("restore fell back to step %d after %d bad "
+                            "checkpoint(s)", step, len(errors))
+            tree = jax.tree_util.tree_unflatten(treedef, out)
+            return tree, index["step"], index["extra"]
+        raise IOError(
+            f"no committed checkpoint passed verification under {self.root} "
+            f"(bad shards quarantined to {self._quarantine_dir()}): "
+            + "; ".join(errors))

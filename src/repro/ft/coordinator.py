@@ -13,14 +13,34 @@ Runs the jit'd train step under simulated host failures:
 * ``on_rescale`` supports *elastic* restarts: the pointer index is
   host-count-agnostic, so a restore onto fewer hosts re-shards transparently
   (demonstrated in tests with a re-built data pipeline / step function).
+
+Chaos hardening (the ``repro.chaos`` training-side recovery paths):
+
+* **NaN/Inf guard** — a non-finite loss (organic or injected via the
+  ``nan_poison`` fault) *rejects* the already-computed update, rolls the
+  in-memory params/opt back to their pre-step values, and quarantines the
+  poisoned batch index so checkpoint replay skips it too;
+* **escalating backoff** — when the same step fails repeatedly (the
+  multiset :class:`FaultInjector` schedule can hold several faults on one
+  step), the simulated repair wait doubles per repeat and a synchronous
+  checkpoint is forced immediately before the retry, bounding replay waste;
+* a ``ckpt_corrupt`` fault flips bytes in the newest committed checkpoint
+  shard; the subsequent restore transparently falls back to the newest
+  checkpoint that verifies (``CheckpointStore`` quarantine path);
+* a ``slowdown`` fault costs virtual time (a straggler) but loses no state.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import time
+import math
 from typing import Callable
 
 import numpy as np
+
+from repro.chaos.faults import (CAPACITY_LOSS, CKPT_CORRUPT, HOST_CRASH,
+                                NAN_POISON, SLOWDOWN,
+                                corrupt_checkpoint_shard)
 
 from .checkpoint import CheckpointStore
 from .interval import DynamicInterval
@@ -29,39 +49,61 @@ __all__ = ["FaultInjector", "TrainingCoordinator", "CoordinatorReport"]
 
 
 class FaultInjector:
-    """Samples failure steps from Weibull MTBF (in units of steps)."""
+    """Samples failure steps from Weibull MTBF (in units of steps).
+
+    The schedule is a step -> count **multiset** (`collections.Counter`):
+    two faults scheduled — or deferred — onto the same step remain two
+    distinct faults and strike on consecutive visits, instead of silently
+    collapsing into one as a plain set would.
+    """
 
     def __init__(self, *, mtbf_steps: float, shape: float = 12.0,
                  mttr_steps: float = 2.0, seed: int = 0,
                  horizon_steps: int = 100_000):
         rng = np.random.default_rng(seed)
-        self.fail_steps: set[int] = set()
+        self._schedule: collections.Counter = collections.Counter()
         self.mttr_steps = mttr_steps
         t = rng.uniform(0, mtbf_steps)
         while t < horizon_steps:
-            self.fail_steps.add(int(t))
+            self._schedule[int(t)] += 1
             t += max(1.0, mtbf_steps * rng.weibull(shape))
 
+    @property
+    def fail_steps(self) -> collections.Counter:
+        """step -> scheduled-fault count (supports ``in`` / iteration)."""
+        return self._schedule
+
+    @fail_steps.setter
+    def fail_steps(self, steps) -> None:
+        # accepts a set/iterable (each step once) or a mapping step -> count
+        self._schedule = collections.Counter(steps)
+
     def fails_at(self, step: int) -> bool:
-        return step in self.fail_steps
+        return self._schedule[step] > 0
 
     def consume(self, step: int) -> bool:
-        """Pop the failure scheduled at ``step`` (True if one fired)."""
-        if step in self.fail_steps:
-            self.fail_steps.discard(step)
+        """Pop one failure scheduled at ``step`` (True if one fired)."""
+        if self._schedule[step] > 0:
+            self._schedule[step] -= 1
+            if not self._schedule[step]:
+                del self._schedule[step]
             return True
         return False
 
     def defer(self, step: int, to_step: int) -> None:
-        """Move a failure scheduled at ``step`` to ``to_step``.
+        """Move one failure scheduled at ``step`` to ``to_step``.
 
         Used when the target is already down at ``step``: the fault is not
         silently absorbed by the outage — it strikes again the moment the
-        target is back up (``to_step`` = repair completion).
+        target is back up (``to_step`` = repair completion).  Deferring onto
+        a step that already holds a fault stacks them (multiset), so two
+        deferred faults fire on two separate visits.
         """
-        if to_step > step and step in self.fail_steps:
-            self.fail_steps.discard(step)
-            self.fail_steps.add(int(to_step))
+        if to_step > step and self._schedule[step] > 0:
+            self._schedule[step] -= 1
+            if not self._schedule[step]:
+                del self._schedule[step]
+            self._schedule[int(to_step)] += 1
 
 
 @dataclasses.dataclass
@@ -73,6 +115,12 @@ class CoordinatorReport:
     checkpoints: int
     final_loss: float
     losses: list
+    nan_rollbacks: int = 0       # NaN/Inf updates rejected by the guard
+    skipped_batches: int = 0     # poisoned batch indices quarantined
+    backoff_steps: float = 0.0   # extra repair wait from escalation
+    ckpt_fallbacks: int = 0      # restores that skipped a corrupt checkpoint
+    ckpt_corruptions: int = 0    # injected ckpt_corrupt events applied
+    slowdowns: int = 0           # straggler events absorbed
 
 
 class TrainingCoordinator:
@@ -80,7 +128,8 @@ class TrainingCoordinator:
                  pipeline, store: CheckpointStore,
                  interval: DynamicInterval | None = None,
                  step_time_s: float = 1.0,
-                 injector: FaultInjector | None = None):
+                 injector: FaultInjector | None = None,
+                 chaos=None):
         self.train_step = train_step
         self.params = params
         self.opt_state = opt_state
@@ -89,8 +138,12 @@ class TrainingCoordinator:
         self.interval = interval or DynamicInterval(gamma_s=1.0)
         self.step_time_s = step_time_s
         self.injector = injector
+        self.chaos = chaos   # repro.chaos.ChaosEngine | None
         self.step = 0
         self._last_ckpt_step = -1
+        self._nan_skip: set[int] = set()         # quarantined batch indices
+        self._fail_counts: collections.Counter = collections.Counter()
+        self._ckpt_before: set[int] = set()      # pre-retry barrier steps
 
     # -- checkpoint cadence in steps -----------------------------------------
     def _ckpt_every(self) -> int:
@@ -110,31 +163,84 @@ class TrainingCoordinator:
         self.pipeline = type(self.pipeline).from_state(
             self.pipeline.cfg, self.pipeline.model_cfg, extra)
         self.step = step
+        # the restored checkpoint IS the last good checkpoint (a fallback
+        # restore may land earlier than the newest save)
+        self._last_ckpt_step = step
 
     # -- main loop --------------------------------------------------------------
     def run(self, n_steps: int) -> CoordinatorReport:
         failures = restores = wasted = ckpts = 0
+        nan_rollbacks = skipped = slowdowns = corruptions = fallbacks = 0
+        backoff_steps = 0.0
         losses: list[float] = []
         self._save(sync=True)
         ckpts += 1
         virtual_t = 0.0
         while self.step < n_steps:
-            if self.injector is not None and self.injector.consume(self.step):
+            step = self.step
+            if step in self._ckpt_before and self._last_ckpt_step < step:
+                # a previous visit to this step failed repeatedly: checkpoint
+                # right before the retry so a re-strike replays nothing
+                self._save(sync=True)
+                ckpts += 1
+            # -- faults scheduled for this step ------------------------------
+            crash = False
+            poison = False
+            repair = float(self.injector.mttr_steps
+                           if self.injector is not None else 2.0)
+            if self.chaos is not None:
+                for ev in self.chaos.events_at(step):
+                    if ev.kind in (HOST_CRASH, CAPACITY_LOSS):
+                        crash = True
+                        repair = max(repair, float(ev.duration))
+                    elif ev.kind == SLOWDOWN:
+                        slowdowns += 1
+                        virtual_t += ev.duration * self.step_time_s
+                    elif ev.kind == CKPT_CORRUPT:
+                        if corrupt_checkpoint_shard(self.store, ev.seed):
+                            corruptions += 1
+                    elif ev.kind == NAN_POISON:
+                        poison = True
+            if self.injector is not None and self.injector.consume(step):
+                crash = True
+            if crash:
                 # host failure mid-step: lose work since last checkpoint
                 failures += 1
-                wasted += self.step - self._last_ckpt_step
+                wasted += step - self._last_ckpt_step
+                self._fail_counts[step] += 1
+                streak = self._fail_counts[step]
+                backoff = repair * (2 ** (streak - 1))   # escalate on repeat
+                backoff_steps += backoff - repair
+                if streak >= 2:
+                    self._ckpt_before.add(step)
                 self.interval.record_failure(virtual_t)
-                self.interval.record_repair(
-                    self.injector.mttr_steps * self.step_time_s)
-                virtual_t += self.injector.mttr_steps * self.step_time_s
+                self.interval.record_repair(backoff * self.step_time_s)
+                virtual_t += backoff * self.step_time_s
                 self._restore()
+                fallbacks += self.store.last_restore_fallbacks
                 restores += 1
                 continue
-            batch = self.pipeline.batch_at(self.pipeline.next_index)
+            # -- one train step (skipping quarantined batches) ---------------
+            while self.pipeline.next_index in self._nan_skip:
+                self.pipeline.next_index += 1
+            bidx = self.pipeline.next_index
+            batch = self.pipeline.batch_at(bidx)
             self.pipeline.next_index += 1
-            self.params, self.opt_state, metrics = self.train_step(
+            params, opt_state, metrics = self.train_step(
                 self.params, self.opt_state, batch)
-            losses.append(float(metrics["loss"]))
+            loss = float(metrics["loss"])
+            if poison:
+                loss = float("nan")   # injected: poisoned train-step output
+            if not math.isfinite(loss):
+                # NaN/Inf guard: reject the update (params/opt keep their
+                # pre-step values) and quarantine the batch so checkpoint
+                # replay skips it too
+                nan_rollbacks += 1
+                skipped += 1
+                self._nan_skip.add(bidx)
+                continue
+            self.params, self.opt_state = params, opt_state
+            losses.append(loss)
             self.step += 1
             virtual_t += self.step_time_s
             if self.step - self._last_ckpt_step >= self._ckpt_every():
@@ -144,4 +250,7 @@ class TrainingCoordinator:
         return CoordinatorReport(
             steps_completed=self.step, failures=failures, restores=restores,
             wasted_steps=wasted, checkpoints=ckpts,
-            final_loss=losses[-1] if losses else float("nan"), losses=losses)
+            final_loss=losses[-1] if losses else float("nan"), losses=losses,
+            nan_rollbacks=nan_rollbacks, skipped_batches=skipped,
+            backoff_steps=float(backoff_steps), ckpt_fallbacks=fallbacks,
+            ckpt_corruptions=corruptions, slowdowns=slowdowns)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chaos import SERVE_KINDS, ChaosEngine, FaultTrace, sample_trace
 from repro.configs import get_config
 from repro.distributed import params as pshard
 from repro.distributed.sharding import use_rules
@@ -36,6 +37,45 @@ from repro.models import lm
 from repro.serve import (EngineConfig, Request, ServeEngine, WorkerPool,
                          crch_policy, engine_supported, greedy_reference,
                          prompt_bucket, uniform_policy)
+
+
+def make_chaos(args, *, kinds, n_targets: int, horizon: int):
+    """Build a ChaosEngine from the --chaos* flags (None when disabled).
+
+    ``--chaos-trace`` replays a recorded trace verbatim (bit-identical run);
+    otherwise ``--chaos PROFILE`` samples a fresh trace from the profile's
+    Section 4.1 distributions, optionally recorded with ``--chaos-record``.
+    """
+    if args.chaos_trace:
+        trace = FaultTrace.load(args.chaos_trace)
+    elif args.chaos != "none":
+        trace = sample_trace(args.chaos, horizon=horizon,
+                             n_targets=n_targets, seed=args.chaos_seed,
+                             kinds=kinds)
+    else:
+        return None
+    if args.chaos_record:
+        trace.save(args.chaos_record)
+    print(f"chaos: {len(trace)} events over {sorted(trace.kinds())} "
+          f"(meta={trace.meta})")
+    return ChaosEngine(trace)
+
+
+def add_chaos_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--chaos", choices=("none", "stable", "normal",
+                                        "unstable"), default="none",
+                    help="sample a multi-fault chaos trace from this profile")
+    ap.add_argument("--chaos-trace", default="",
+                    help="replay a recorded fault trace (JSON) verbatim")
+    ap.add_argument("--chaos-record", default="",
+                    help="record the active fault trace to this path")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-horizon", type=int, default=0,
+                    help="trace horizon in steps (0 = derive from the run)")
+    ap.add_argument("--chaos-assert", action="store_true",
+                    help="CI smoke: require survival — completions with "
+                         "nonzero restores/resubmissions and zero "
+                         "past-first-token drops")
 
 
 def _sharded_params(cfg, mesh, seed: int):
@@ -82,11 +122,15 @@ def continuous_main(cfg, mesh, args) -> None:
     pool = WorkerPool(args.workers, args.slots_per_worker,
                       environment=(args.env if args.env != "none" else None),
                       seed=args.seed)
+    horizon = args.chaos_horizon or min(
+        args.max_steps, 8 * max(r.max_new_tokens for r in reqs))
+    chaos = make_chaos(args, kinds=SERVE_KINDS, n_targets=args.workers,
+                       horizon=horizon)
     with use_rules(mesh):
         params = _sharded_params(cfg, mesh, args.seed)
         engine = ServeEngine(
             cfg, EngineConfig(cache_len=cache_len, q_chunk=64),
-            pool=pool, policy=policy, params=params)
+            pool=pool, policy=policy, params=params, chaos=chaos)
         for r in reqs:
             engine.submit(r)
         t0 = time.time()
@@ -108,9 +152,28 @@ def continuous_main(cfg, mesh, args) -> None:
           f"failures {int(s['failures'])} resubmissions "
           f"{int(s['resubmissions'])} snapshot-restores "
           f"{int(s['restores'])}")
+    if chaos is not None:
+        print(f"chaos applied: {dict(chaos.applied_by_kind)} | shed "
+              f"{int(s['shed'])} hedge-drops {int(s['hedge_drops'])} "
+              f"snapshot-verify-fails {int(s['snapshot_restore_failures'])} "
+              f"past-first-token drops {int(s['past_first_drops'])}")
     done = sorted(engine.completed)
     assert done, "no requests completed"
     print("sample:", engine.completed[done[0]][:12])
+    if args.chaos_assert:
+        assert chaos is not None, "--chaos-assert needs an active chaos run"
+        assert chaos.applied, "chaos trace fired no events"
+        assert s["completed"] > 0, "no requests survived the chaos run"
+        recoveries = int(s["restores"]) + int(s["resubmissions"])
+        assert recoveries > 0, (
+            "chaos run exercised no recovery path "
+            f"(restores+resubmissions == 0, applied "
+            f"{dict(chaos.applied_by_kind)})")
+        assert s["past_first_drops"] == 0, (
+            f"{int(s['past_first_drops'])} request(s) dropped past their "
+            f"first token — degraded mode must never shed live work")
+        print(f"chaos-assert OK: {int(s['completed'])} completed, "
+              f"{recoveries} recoveries, 0 past-first-token drops")
     if args.verify_static:
         with use_rules(mesh):
             ref = greedy_reference(params, cfg, reqs, cache_len, q_chunk=64)
@@ -187,7 +250,11 @@ def main() -> None:
     ap.add_argument("--mesh", choices=("debug", "single", "multi"),
                     default="debug")
     ap.add_argument("--seed", type=int, default=0)
+    add_chaos_args(ap)
     args = ap.parse_args()
+    if args.static and (args.chaos != "none" or args.chaos_trace):
+        raise SystemExit("--static has no fault tolerance to chaos-test; "
+                         "use the continuous engine")
 
     cfg = get_config(args.arch, tiny=args.tiny)
     mesh = (make_debug_mesh() if args.mesh == "debug" else

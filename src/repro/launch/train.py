@@ -15,6 +15,7 @@ import time
 import jax
 import numpy as np
 
+from repro.chaos import TRAIN_KINDS
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticTokenPipeline
 from repro.distributed import params as pshard
@@ -23,6 +24,7 @@ from repro.distributed.steps import make_train_step
 from repro.ft import (CheckpointStore, DynamicInterval, FaultInjector,
                       TrainingCoordinator)
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.serve import add_chaos_args, make_chaos
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init
 
@@ -43,6 +45,7 @@ def main() -> None:
     ap.add_argument("--inject-mtbf-steps", type=float, default=0.0,
                     help="simulate failures every ~N steps (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
+    add_chaos_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -66,11 +69,13 @@ def main() -> None:
                                   seed=args.seed,
                                   horizon_steps=args.steps)
                     if args.inject_mtbf_steps else None)
+        chaos = make_chaos(args, kinds=TRAIN_KINDS, n_targets=1,
+                           horizon=args.chaos_horizon or args.steps)
         coord = TrainingCoordinator(
             train_step=step_fn, params=params, opt_state=opt_state,
             pipeline=pipeline, store=CheckpointStore(args.ckpt_dir),
             interval=DynamicInterval(gamma_s=args.ckpt_gamma_s),
-            injector=injector)
+            injector=injector, chaos=chaos)
 
         t0 = time.time()
         report = coord.run(args.steps)
@@ -79,12 +84,30 @@ def main() -> None:
     print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
           f"steps={report.steps_completed} failures={report.failures} "
           f"restores={report.restores} ckpts={report.checkpoints}")
+    if chaos is not None:
+        print(f"chaos applied: {dict(chaos.applied_by_kind)} | "
+              f"nan-rollbacks {report.nan_rollbacks} skipped-batches "
+              f"{report.skipped_batches} ckpt-fallbacks "
+              f"{report.ckpt_fallbacks} ckpt-corruptions "
+              f"{report.ckpt_corruptions} slowdowns {report.slowdowns} "
+              f"backoff {report.backoff_steps:.0f} steps")
     n = max(1, len(report.losses) // 10)
     first = float(np.mean(report.losses[:n]))
     last = float(np.mean(report.losses[-n:]))
     print(f"loss: first10%={first:.4f} last10%={last:.4f} "
           f"({'improved' if last < first else 'NOT improved'}) "
           f"wall={dt:.1f}s ({dt / max(report.steps_completed, 1):.2f}s/step)")
+    if args.chaos_assert:
+        assert chaos is not None, "--chaos-assert needs an active chaos run"
+        assert chaos.applied, "chaos trace fired no events"
+        assert report.steps_completed == args.steps, (
+            f"training did not survive: {report.steps_completed}/"
+            f"{args.steps} steps")
+        assert report.restores > 0, "chaos run exercised no restore path"
+        assert all(np.isfinite(report.losses)), "non-finite loss escaped the "\
+            "NaN guard"
+        print(f"chaos-assert OK: {report.steps_completed} steps, "
+              f"{report.restores} restores, all losses finite")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,22 @@ Idle slots are masked out of the batched cache write every tick (stale
 ``last_token``/``pos`` must never rewrite a freed row), and completed
 request state is evicted FIFO beyond ``retain_completed`` so a long-running
 service holds bounded host memory.
+
+Chaos hardening (``repro.chaos`` serving-side recovery paths): a
+:class:`~repro.chaos.ChaosEngine` passed as ``chaos=`` injects the wider
+fault taxonomy each tick — ``host_crash`` / ``capacity_loss`` take workers
+down (the latter for its own MTTR window), ``slowdown`` stalls a worker's
+slots without losing state (they are masked out of the batched decode until
+the straggler recovers, then resume bit-identically), and
+``snapshot_corrupt`` flips bytes in a stored decode snapshot.  Recovery:
+snapshots are checksum-verified before a resume — a corrupt one is
+quarantined and the request re-prefills from scratch; under capacity loss
+the admission queue runs **deadline-aware load shedding** (degraded-mode
+serving): queued hedge copies collapse to one, and a queued request that
+provably cannot meet its deadline even if admitted this very tick is shed,
+lowest request class (priority, then slack) first.  A request with a live
+copy past its first token is *never* shed — the ``past_first_token_drops``
+metric is the tripwire proving it.
 """
 from __future__ import annotations
 
@@ -42,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.chaos import faults
 from repro.distributed.steps import make_prefill_step, make_serve_step
 from repro.ft.interval import DynamicInterval
 from repro.models import lm
@@ -84,6 +101,10 @@ class EngineConfig:
     # their request / completed / snapshot entries (bounds engine host state
     # for a long-running service)
     retain_completed: int = 4096
+    # degraded mode: deadline-aware admission-queue load shedding under
+    # capacity loss (hedge copies collapse first, then provably-late
+    # requests are shed lowest-class-first)
+    shed_enabled: bool = True
 
 
 @dataclasses.dataclass
@@ -104,7 +125,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig | None = None, *,
                  pool: WorkerPool, policy: ReplicaPolicy | None = None,
                  params=None, metrics: ServeMetrics | None = None,
-                 seed: int = 0):
+                 chaos=None, seed: int = 0):
         ok, why = engine_supported(cfg)
         if not ok:
             raise ValueError(f"{cfg.name}: {why}")
@@ -120,6 +141,8 @@ class ServeEngine:
                 f"{cfg.name}: cache_len {self.ecfg.cache_len} exceeds the "
                 f"learned decoder position table ({cfg.max_decode_len})")
         self.pool = pool
+        self.chaos = chaos   # repro.chaos.ChaosEngine | None
+        self.shed: set[int] = set()   # rids dropped in degraded mode
         self.policy = policy or uniform_policy(1)
         self.params = (params if params is not None
                        else lm.init_params(jax.random.key(seed), cfg))
@@ -180,6 +203,27 @@ class ServeEngine:
             self.queue.submit(WorkItem(req, copy_id=k))
         return rep
 
+    # -- chaos injection (repro.chaos taxonomy) ------------------------------
+    def _apply_chaos(self, t: int) -> None:
+        for ev in self.chaos.events_at(t):
+            if ev.kind == faults.HOST_CRASH:
+                for wid in (ev.targets or (0,)):
+                    self.pool.force_failure(t, wid % self.pool.n_workers)
+            elif ev.kind == faults.CAPACITY_LOSS:
+                wids = sorted({w % self.pool.n_workers
+                               for w in (ev.targets or (0,))})
+                self.pool.force_outage(t, wids, ev.duration)
+                self.metrics.capacity_events += 1
+            elif ev.kind == faults.SLOWDOWN:
+                for wid in (ev.targets or (0,)):
+                    self.pool.slow(wid % self.pool.n_workers,
+                                   t + ev.duration)
+                self.metrics.slowdown_events += 1
+            elif ev.kind == faults.SNAPSHOT_CORRUPT:
+                self.metrics.snapshots_corrupted += \
+                    self.store.corrupt(ev.seed)
+            # ckpt_corrupt / nan_poison are training-side faults: no-op here
+
     # -- failures (Algorithm 3 Case 1) ---------------------------------------
     def _on_worker_failures(self, t: int) -> None:
         for wid in self.pool.step_failures(t):
@@ -207,11 +251,18 @@ class ServeEngine:
 
     def _kill_copy(self, slot: _Slot, *, resubmit_if_last: bool) -> None:
         rid = slot.rid
+        had_tokens = bool(slot.tokens)
         live = self.active.get(rid, set())
         live.discard(slot.sid)
         if not live:
             self.active.pop(rid, None)   # prune: empty sets must not linger
         self._release(slot)
+        if rid in self.shed:
+            # tripwire: shedding must never have dropped a request that was
+            # already past its first token (the guard in _shed forbids it)
+            if had_tokens:
+                self.metrics.past_first_token_drops += 1
+            return
         if not resubmit_if_last or rid in self.completed:
             return
         # resubmit only when every copy has failed AND none is still queued
@@ -222,16 +273,70 @@ class ServeEngine:
                                        snapshot=snap, is_resubmission=True))
             self.metrics.resubmissions += 1
 
+    # -- degraded mode: deadline-aware load shedding -------------------------
+    def _min_finish_step(self, item: WorkItem, t: int) -> int:
+        """Earliest step this item could complete if admitted at ``t``.
+
+        A fresh prefill emits its first token at the admit tick AND the slot
+        joins the same tick's batched decode (two tokens by end of step
+        ``t``); a snapshot resume re-enters with ``e`` tokens banked and
+        decodes at ``t``.  The bound must never overshoot — shedding a
+        request that could still have met its deadline is forbidden."""
+        emitted = len(item.snapshot.tokens) if item.snapshot is not None else 0
+        need = item.req.max_new_tokens
+        if emitted >= need:
+            return t
+        return t + need - max(emitted, 1) - 1
+
+    @staticmethod
+    def _shed_rank(req: Request):
+        """Shedding order: lowest request class first — priority ascending,
+        then tightest deadline slack (the least likely to finish)."""
+        slack = (req.deadline - req.arrival - req.total_work
+                 if req.deadline is not None else float("inf"))
+        return (req.priority, slack)
+
+    def _shed(self, t: int) -> None:
+        if not self.ecfg.shed_enabled or not len(self.queue):
+            return
+        # capacity loss -> stop paying for hedges: collapse queued copies
+        up_slots = sum(self.pool.slots_per_worker
+                       for w in range(self.pool.n_workers)
+                       if self.pool.is_up(w, t))
+        busy = sum(s.busy for s in self.slots)
+        if (up_slots < self.pool.n_slots
+                and len(self.queue) > max(up_slots - busy, 0)):
+            self.metrics.hedge_drops += self.queue.drop_hedges()
+        # shed requests that provably cannot meet their deadline even if
+        # admitted this very tick, lowest request class first
+        doomed: dict[int, Request] = {}
+        for item in self.queue.items():
+            dl = item.req.deadline
+            if dl is None or self._min_finish_step(item, t) <= dl:
+                continue
+            doomed.setdefault(item.req.rid, item.req)
+        for rid, req in sorted(doomed.items(),
+                               key=lambda kv: self._shed_rank(kv[1])):
+            if self.active.get(rid):
+                # never shed a request with a live copy — once past its
+                # first token it either completes or is resubmitted
+                continue
+            self.queue.cancel(rid)
+            self.shed.add(rid)
+            self.metrics.mark_shed(rid, t)
+
     # -- admission into freed slots ------------------------------------------
     def _admit(self, t: int) -> None:
         for slot in self.slots:
             wid = self.pool.worker_of(slot.sid)
-            if slot.busy or not self.pool.is_up(wid, t):
+            if (slot.busy or not self.pool.is_up(wid, t)
+                    or self.pool.is_slow(wid, t)):
                 continue
 
             def admissible(item: WorkItem, _wid=wid) -> bool:
                 rid = item.req.rid
-                if rid in self.completed or item.req.arrival > t:
+                if (rid in self.completed or rid in self.shed
+                        or item.req.arrival > t):
                     return False
                 others = self.active.get(rid, set())
                 return all(self.pool.worker_of(s) != _wid for s in others)
@@ -275,6 +380,12 @@ class ServeEngine:
         slot.since_snapshot = 0
         self.active.setdefault(req.rid, set()).add(slot.sid)
         snap: DecodeSnapshot | None = item.snapshot
+        if snap is not None and not self.store.verify(snap):
+            # checksum mismatch: quarantine the snapshot and fall back to a
+            # full re-prefill — never resume from garbage decode state
+            self.metrics.snapshot_restore_failures += 1
+            self.store.drop(snap.rid)
+            snap = None
         if snap is not None:
             row = jax.tree.map(jnp.asarray, snap.cache_row)
             self.cache = self._set(self.cache, slot.sid, row)
@@ -304,7 +415,12 @@ class ServeEngine:
 
     # -- one batched decode step ---------------------------------------------
     def _decode(self, t: int) -> None:
-        busy = [s for s in self.slots if s.busy]
+        # straggler slots stall: masked out of the batched write, no token
+        # progress, state intact — they resume bit-identically on recovery
+        stalled = {s.sid for s in self.slots if s.busy and
+                   self.pool.is_slow(self.pool.worker_of(s.sid), t)}
+        busy = [s for s in self.slots
+                if s.busy and s.sid not in stalled]
         if not busy:
             return
         toks = np.zeros((len(self.slots), 1), np.int32)
@@ -313,7 +429,7 @@ class ServeEngine:
         for s in self.slots:
             toks[s.sid, 0] = s.last_token
             poss[s.sid] = s.pos
-            live[s.sid] = s.busy
+            live[s.sid] = s.busy and s.sid not in stalled
         nxt, _, self.cache = self._serve(
             self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
             jnp.asarray(live))
@@ -370,7 +486,10 @@ class ServeEngine:
     # -- main loop -----------------------------------------------------------
     def step(self) -> None:
         t = self.step_no
+        if self.chaos is not None:
+            self._apply_chaos(t)
         self._on_worker_failures(t)
+        self._shed(t)
         self._admit(t)
         self._decode(t)
         self._take_snapshots(t)

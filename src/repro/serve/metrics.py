@@ -33,6 +33,7 @@ class RequestRecord:
     prompt_len: int
     max_new: int
     completed_step: int | None = None
+    shed_step: int | None = None    # load-shed (degraded mode), never ran
 
     @property
     def completed(self) -> bool:
@@ -59,6 +60,15 @@ class ServeMetrics:
         self.resubmissions = 0
         self.restores = 0
         self.snapshots = 0
+        # degraded-mode / chaos counters
+        self.shed = 0                        # requests load-shed whole
+        self.hedge_drops = 0                 # queued hedge copies dropped
+        self.capacity_events = 0
+        self.slowdown_events = 0
+        self.snapshots_corrupted = 0         # injected corruptions applied
+        self.snapshot_restore_failures = 0   # checksum fails -> re-prefill
+        # tripwire: a request past its first token must never be dropped
+        self.past_first_token_drops = 0
 
     # -- lifecycle hooks (called by the engine) ------------------------------
     def register(self, req) -> None:
@@ -68,6 +78,12 @@ class ServeMetrics:
 
     def complete(self, rid: int, step: int) -> None:
         self.records[rid].completed_step = step
+
+    def mark_shed(self, rid: int, step: int) -> None:
+        rec = self.records.get(rid)
+        if rec is not None:
+            rec.shed_step = step
+        self.shed += 1
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -106,6 +122,11 @@ class ServeMetrics:
             "resubmissions": float(self.resubmissions),
             "restores": float(self.restores),
             "snapshots": float(self.snapshots),
+            "shed": float(self.shed),
+            "hedge_drops": float(self.hedge_drops),
+            "snapshot_restore_failures": float(
+                self.snapshot_restore_failures),
+            "past_first_drops": float(self.past_first_token_drops),
         }
         return out
 

@@ -187,3 +187,27 @@ class AdmissionQueue:
 
     def pending_rids(self) -> set[int]:
         return {it.req.rid for it in self._items}
+
+    def items(self) -> tuple[WorkItem, ...]:
+        """Read-only view of the queued items, head first."""
+        return tuple(self._items)
+
+    def drop_hedges(self) -> int:
+        """Degraded mode: keep at most one queued copy per request.
+
+        Under capacity loss the queue stops paying for replication — extra
+        queued copies of a request are dropped (never resubmissions, and
+        in-flight copies are untouched).  Returns the number dropped.
+        """
+        seen: set[int] = set()
+        kept: list[WorkItem] = []
+        dropped = 0
+        for it in self._items:
+            rid = it.req.rid
+            if rid in seen and not it.is_resubmission:
+                dropped += 1
+                continue
+            seen.add(rid)
+            kept.append(it)
+        self._items = collections.deque(kept)
+        return dropped

@@ -96,9 +96,13 @@ SERVE_ENVIRONMENTS: dict[str, dict] = {
 class _Worker:
     wid: int
     down_until: int = 0         # engine step at which the worker is back up
+    slow_until: int = 0         # straggling until this step (state intact)
 
     def is_up(self, step: int) -> bool:
         return step >= self.down_until
+
+    def is_slow(self, step: int) -> bool:
+        return step < self.slow_until
 
 
 class WorkerPool:
@@ -129,6 +133,8 @@ class WorkerPool:
             else:
                 self.injectors.append(None)
         self.forced_failures: dict[int, list[int]] = {}
+        # step -> [(wid, outage duration)] for chaos capacity-loss events
+        self.forced_outages: dict[int, list[tuple[int, int]]] = {}
 
     @property
     def n_slots(self) -> int:
@@ -144,9 +150,27 @@ class WorkerPool:
     def is_up(self, wid: int, step: int) -> bool:
         return self.workers[wid].is_up(step)
 
+    def is_slow(self, wid: int, step: int) -> bool:
+        return self.workers[wid].is_slow(step)
+
+    def n_up(self, step: int) -> int:
+        return sum(w.is_up(step) for w in self.workers)
+
     def force_failure(self, step: int, wid: int) -> None:
         """Deterministically kill ``wid`` at ``step`` (tests/demos)."""
         self.forced_failures.setdefault(step, []).append(wid)
+
+    def force_outage(self, step: int, wids, duration: int) -> None:
+        """Capacity loss: take ``wids`` down at ``step`` for ``duration``
+        steps (a chaos ``capacity_loss`` MTTR window)."""
+        self.forced_outages.setdefault(step, []).extend(
+            (int(w), int(duration)) for w in wids)
+
+    def slow(self, wid: int, until_step: int) -> None:
+        """Straggler: ``wid`` stalls (no decode progress, no state loss)
+        until ``until_step``."""
+        w = self.workers[wid]
+        w.slow_until = max(w.slow_until, int(until_step))
 
     def step_failures(self, step: int) -> list[int]:
         """Workers that fail at ``step``; marks them down for MTTR steps.
@@ -157,15 +181,20 @@ class WorkerPool:
         worker comes back up.
         """
         failed = []
+        outages = dict(self.forced_outages.get(step, ()))
         for w in self.workers:
             inj = self.injectors[w.wid]
             hit = w.wid in self.forced_failures.get(step, ())
+            dur = self.mttr_steps
+            if w.wid in outages:   # capacity loss carries its own window
+                hit = True
+                dur = max(dur, outages[w.wid])
             if inj is not None:
                 if w.is_up(step):
                     hit = inj.consume(step) or hit
                 else:
                     inj.defer(step, w.down_until)
             if hit and w.is_up(step):
-                w.down_until = step + self.mttr_steps
+                w.down_until = step + dur
                 failed.append(w.wid)
         return failed

@@ -13,10 +13,18 @@ The slot get/set helpers are cache-layout agnostic: the per-leaf batch axis
 is discovered by probing ``lm.init_cache`` shapes at two batch sizes, so the
 same code handles dense (L, B, S, H, D), RWKV (L, B, ...) and hybrid
 (n_super, rec, B, ...) cache pytrees.
+
+Robustness (the ``repro.chaos`` ``snapshot_corrupt`` recovery path): every
+snapshot carries a content checksum computed at save time;
+:meth:`SnapshotStore.verify` re-derives it before a restore, so a torn or
+corrupted snapshot is detected instead of silently resuming from garbage
+state — the engine then quarantines it and falls back to re-prefill.
+:meth:`SnapshotStore.corrupt` is the seeded fault injector for that path.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import jax
 import numpy as np
@@ -30,6 +38,7 @@ __all__ = [
     "slot_set",
     "DecodeSnapshot",
     "SnapshotStore",
+    "snapshot_digest",
 ]
 
 
@@ -79,10 +88,22 @@ class DecodeSnapshot:
     last_token: int
     cache_row: object           # single-slot cache pytree (np arrays)
     step: int                   # engine step at which it was taken
+    checksum: str = ""          # content hash set by SnapshotStore.save
 
     def nbytes(self) -> int:
         return int(sum(np.asarray(l).nbytes
                        for l in jax.tree.leaves(self.cache_row)))
+
+
+def snapshot_digest(snap: DecodeSnapshot) -> str:
+    """Content hash over decode registers + tokens + every cache-row leaf."""
+    h = hashlib.sha1()
+    h.update(np.asarray([snap.rid, snap.pos, snap.last_token],
+                        np.int64).tobytes())
+    h.update(np.asarray(snap.tokens, np.int64).tobytes())
+    for leaf in jax.tree.leaves(snap.cache_row):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
 
 
 class SnapshotStore:
@@ -93,8 +114,10 @@ class SnapshotStore:
         self._by_rid: dict[int, DecodeSnapshot] = {}
         self.saved = 0
         self.bytes_written = 0
+        self.corrupted = 0
 
     def save(self, snap: DecodeSnapshot) -> None:
+        snap.checksum = snapshot_digest(snap)
         self._by_rid[snap.rid] = snap
         self.saved += 1
         self.bytes_written += snap.nbytes()
@@ -104,6 +127,37 @@ class SnapshotStore:
 
     def drop(self, rid: int) -> None:
         self._by_rid.pop(rid, None)
+
+    def verify(self, snap: DecodeSnapshot) -> bool:
+        """True iff the snapshot's content still matches its checksum
+        (snapshots without one — hand-built — are trusted)."""
+        return not snap.checksum or snap.checksum == snapshot_digest(snap)
+
+    def corrupt(self, seed: int) -> int:
+        """Chaos ``snapshot_corrupt``: flip one byte in one stored snapshot.
+
+        Victim snapshot/leaf/byte are pure functions of ``seed`` so a trace
+        replay corrupts the exact same state.  Returns 0 when no snapshot
+        (or no non-empty leaf) exists, else 1.
+        """
+        if not self._by_rid:
+            return 0
+        rids = sorted(self._by_rid)
+        snap = self._by_rid[rids[seed % len(rids)]]
+        leaves = [np.asarray(l) for l in jax.tree.leaves(snap.cache_row)]
+        treedef = jax.tree.structure(snap.cache_row)
+        victims = [i for i, l in enumerate(leaves) if l.size]
+        if not victims:
+            return 0
+        vi = victims[seed % len(victims)]
+        # device_get rows can be read-only views: flip on a copy and rebuild
+        raw = bytearray(np.ascontiguousarray(leaves[vi]).tobytes())
+        raw[seed % len(raw)] ^= 0xFF
+        leaves[vi] = np.frombuffer(bytes(raw), dtype=leaves[vi].dtype
+                                   ).reshape(leaves[vi].shape)
+        snap.cache_row = jax.tree.unflatten(treedef, leaves)
+        self.corrupted += 1
+        return 1
 
     def __len__(self) -> int:
         return len(self._by_rid)

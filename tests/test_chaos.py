@@ -1,0 +1,337 @@
+"""Tests for repro.chaos: trace record/replay determinism plus every fault
+class's dedicated recovery path across the training and serving layers.
+
+Recovery-path coverage map (one test per taxonomy entry):
+
+* ``host_crash``       -> test_serve_chaos_trace_replay_is_identical /
+                          test_train_escalating_backoff_on_repeated_step
+* ``slowdown``         -> test_serve_slowdown_stalls_then_resumes_bit_identical
+                          / test_train_slowdown_and_capacity_loss
+* ``capacity_loss``    -> test_serve_capacity_loss_sheds_hopeless_only
+* ``ckpt_corrupt``     -> test_restore_falls_back_to_previous_checkpoint /
+                          test_train_ckpt_corrupt_falls_back
+* ``snapshot_corrupt`` -> test_serve_snapshot_corrupt_falls_back_to_reprefill
+* ``nan_poison``       -> test_train_nan_poison_guard_skips_batch
+"""
+import collections
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import (CAPACITY_LOSS, CKPT_CORRUPT, HOST_CRASH, NAN_POISON,
+                         SERVE_KINDS, SLOWDOWN, SNAPSHOT_CORRUPT, ChaosEngine,
+                         FaultEvent, FaultTrace, corrupt_checkpoint_shard,
+                         sample_trace)
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.distributed.steps import make_train_step
+from repro.ft import (CheckpointStore, DynamicInterval, FaultInjector,
+                      TrainingCoordinator)
+from repro.models import lm
+from repro.optim import adamw_init
+from repro.serve import (AdmissionQueue, EngineConfig, Request, ServeEngine,
+                         WorkItem, WorkerPool, prompt_bucket, uniform_policy)
+
+
+# ------------------------------------------------------------- fixtures ----
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_config("olmo-1b", tiny=True)
+    params = lm.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def train_setup():
+    cfg = get_config("olmo-1b", tiny=True)
+    params = lm.init_params(jax.random.key(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, q_chunk=16, xent_chunk=16))
+    data_cfg = DataConfig(global_batch=4, seq_len=32)
+    return cfg, params, opt, step, data_cfg
+
+
+def _req(rid, plen, newt, *, arrival=0, deadline=None, vocab=256, seed=0):
+    rng = np.random.default_rng(seed * 7919 + rid)
+    return Request(rid=rid,
+                   prompt=rng.integers(1, vocab, plen,
+                                       dtype=np.int64).astype(np.int32),
+                   max_new_tokens=newt, arrival=arrival, deadline=deadline)
+
+
+def _engine(cfg, params, reqs, *, workers=2, slots=2, chaos=None,
+            policy=None, snapshot_lambda=4, max_steps=2_000):
+    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+                    for r in reqs)
+    pool = WorkerPool(workers, slots, mtbf_steps=0.0, mttr_steps=6, seed=0)
+    engine = ServeEngine(
+        cfg, EngineConfig(cache_len=cache_len, q_chunk=32,
+                          snapshot_lambda=snapshot_lambda),
+        pool=pool, policy=policy or uniform_policy(1), params=params,
+        chaos=chaos)
+    for r in reqs:
+        engine.submit(r)
+    engine.run(max_steps=max_steps)
+    return engine
+
+
+def _coordinator(train_setup, tmp_path, *, chaos=None, injector=None,
+                 lam=2.0, name="ckpt"):
+    cfg, params, opt, step, data_cfg = train_setup
+    return TrainingCoordinator(
+        train_step=step, params=params, opt_state=opt,
+        pipeline=SyntheticTokenPipeline(data_cfg, cfg),
+        store=CheckpointStore(str(tmp_path / name)),
+        interval=DynamicInterval(gamma_s=1.0, lam_min=lam, lam_max=lam),
+        injector=injector, chaos=chaos)
+
+
+# ---------------------------------------------------- traces and replay ----
+
+def test_sample_trace_deterministic_and_roundtrips(tmp_path):
+    a = sample_trace("unstable", horizon=300, n_targets=4, seed=11)
+    b = sample_trace("unstable", horizon=300, n_targets=4, seed=11)
+    assert a.to_json() == b.to_json() and len(a) > 0
+    assert sample_trace("unstable", horizon=300, n_targets=4,
+                        seed=12).to_json() != a.to_json()
+    path = str(tmp_path / "trace.json")
+    a.save(path)
+    assert FaultTrace.load(path).to_json() == a.to_json()
+    only = sample_trace("unstable", horizon=300, seed=11,
+                        kinds=(HOST_CRASH,))
+    assert only.kinds() == {HOST_CRASH}
+
+
+def test_chaos_engine_fires_each_event_exactly_once():
+    trace = FaultTrace(events=[
+        FaultEvent(step=3, kind=HOST_CRASH, targets=(0,), duration=2),
+        FaultEvent(step=3, kind=SLOWDOWN, targets=(1,), duration=4),
+        FaultEvent(step=7, kind=NAN_POISON)])
+    eng = ChaosEngine(trace)
+    assert eng.pending() == 3
+    assert len(eng.events_at(3)) == 2
+    assert eng.events_at(3) == []          # never re-fires
+    assert [e.kind for e in eng.events_at(7)] == [NAN_POISON]
+    assert eng.pending() == 0
+    assert eng.applied_by_kind == collections.Counter(
+        {HOST_CRASH: 1, SLOWDOWN: 1, NAN_POISON: 1})
+
+
+# ------------------------------------------- fault injector (multiset) ----
+
+def test_fault_injector_multiset_defer_not_absorbed():
+    inj = FaultInjector(mtbf_steps=10.0, seed=0, horizon_steps=0)
+    inj.fail_steps = {5, 8}               # legacy set assignment still works
+    assert 5 in inj.fail_steps and inj.fails_at(8)
+    inj.defer(5, 8)                       # lands on an occupied step
+    assert 5 not in inj.fail_steps
+    assert inj.fail_steps[8] == 2         # stacked, not absorbed
+    assert inj.consume(8) and inj.consume(8)
+    assert not inj.consume(8)
+    inj.fail_steps = collections.Counter({3: 2})   # mapping form
+    assert inj.consume(3) and inj.consume(3) and not inj.consume(3)
+
+
+# ---------------------------------------------------- checkpoint store ----
+
+def test_restore_falls_back_to_previous_checkpoint(tmp_path):
+    """Flipped bytes in a committed shard: restore must land on the previous
+    verified checkpoint with the bad shard quarantined (reason logged)."""
+    store = CheckpointStore(str(tmp_path), n_hosts=2)
+    for s in (1, 2, 3):
+        store.save(s, {"w": np.arange(1000.0) * s, "b": np.ones(600) * s},
+                   extra={"next_index": s})
+    assert corrupt_checkpoint_shard(store, seed=0) is not None
+    like = {"w": np.zeros(1000), "b": np.zeros(600)}
+    tree, step, extra = store.restore(like)
+    assert step == 2 and extra["next_index"] == 2
+    np.testing.assert_array_equal(tree["w"], np.arange(1000.0) * 2)
+    assert store.last_restore_fallbacks == 1
+    assert store.quarantined and \
+        "checksum" in store.quarantined[0]["reason"]
+    assert os.path.exists(os.path.join(str(tmp_path), "quarantine",
+                                       "LOG.jsonl"))
+    # the failed index is retired: the next restore goes straight to step 2
+    assert store.committed_steps() == [1, 2]
+
+
+def test_restore_raises_clear_error_when_all_corrupt(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, {"w": np.arange(64.0)})
+    store.save(2, {"w": np.arange(64.0) + 9})
+    for root, _, files in os.walk(tmp_path):
+        for f in files:
+            if f.endswith(".npy"):
+                p = os.path.join(root, f)
+                np.save(p, np.load(p) + 1.0)
+    with pytest.raises(IOError, match="checksum"):
+        store.restore({"w": np.zeros(64)})
+    assert len(store.quarantined) == 2
+
+
+class _Boom:
+    def __array__(self, *a, **k):
+        raise RuntimeError("boom: disk full")
+
+
+def test_async_save_errors_surface_from_wait(tmp_path):
+    """An exception inside the async _write thread must re-raise from
+    wait(), never silently leave a stale pointer."""
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, {"x": np.ones(8)})
+    store.save(2, {"x": _Boom()}, sync=False)
+    with pytest.raises(RuntimeError, match="disk full"):
+        store.wait()
+    assert store.latest_step() == 1       # failed save committed nothing
+    store.save(3, {"x": np.ones(8)}, sync=False)   # store remains usable
+    store.wait()
+    assert store.latest_step() == 3
+
+
+# ----------------------------------------------------- training chaos ----
+
+def test_train_nan_poison_guard_skips_batch(tmp_path, train_setup):
+    trace = FaultTrace(events=[FaultEvent(step=2, kind=NAN_POISON)])
+    coord = _coordinator(train_setup, tmp_path, chaos=ChaosEngine(trace))
+    rep = coord.run(6)
+    assert rep.steps_completed == 6
+    assert rep.nan_rollbacks == 1 and rep.skipped_batches == 1
+    assert all(np.isfinite(rep.losses))
+    assert coord._nan_skip                # poisoned batch stays quarantined
+
+
+def test_train_ckpt_corrupt_falls_back(tmp_path, train_setup):
+    """ckpt_corrupt + same-step crash: the restore must skip the corrupted
+    newest checkpoint and recover from its predecessor."""
+    trace = FaultTrace(events=[
+        FaultEvent(step=4, kind=CKPT_CORRUPT, seed=7),
+        FaultEvent(step=4, kind=HOST_CRASH, duration=2)])
+    coord = _coordinator(train_setup, tmp_path, chaos=ChaosEngine(trace))
+    rep = coord.run(8)
+    assert rep.steps_completed == 8
+    assert rep.ckpt_corruptions == 1
+    assert rep.ckpt_fallbacks >= 1 and rep.restores >= 1
+    assert coord.store.quarantined
+
+
+def test_train_escalating_backoff_on_repeated_step(tmp_path, train_setup):
+    """Three faults stacked on one step: repair wait doubles per repeat and
+    a pre-retry checkpoint bounds the replay."""
+    inj = FaultInjector(mtbf_steps=10.0, mttr_steps=4.0, seed=0,
+                        horizon_steps=0)
+    inj.fail_steps = collections.Counter({3: 3})
+    coord = _coordinator(train_setup, tmp_path, injector=inj)
+    rep = coord.run(6)
+    assert rep.steps_completed == 6
+    assert rep.failures == 3 and rep.restores == 3
+    # streaks 1..3 at mttr=4: extra wait (2-1)*4 + (4-1)*4 = 16 steps
+    assert rep.backoff_steps == pytest.approx(16.0)
+    assert 3 in coord._ckpt_before        # pre-retry sync barrier installed
+
+
+def test_train_slowdown_and_capacity_loss(tmp_path, train_setup):
+    trace = FaultTrace(events=[
+        FaultEvent(step=1, kind=SLOWDOWN, duration=5),
+        FaultEvent(step=3, kind=CAPACITY_LOSS, targets=(0,), duration=4)])
+    coord = _coordinator(train_setup, tmp_path, chaos=ChaosEngine(trace))
+    rep = coord.run(6)
+    assert rep.steps_completed == 6
+    assert rep.slowdowns == 1
+    assert rep.failures == 1 and rep.restores == 1   # capacity loss = outage
+
+
+# ------------------------------------------------------ serving chaos ----
+
+def test_serve_slowdown_stalls_then_resumes_bit_identical(serve_setup):
+    """A straggler worker stalls its slots without losing state: the run
+    takes longer but the delivered tokens are exactly the clean run's."""
+    cfg, params = serve_setup
+    reqs = [_req(i, 8 + 2 * i, 10, vocab=cfg.vocab_size, seed=3)
+            for i in range(2)]
+    clean = _engine(cfg, params, reqs, workers=1, slots=2)
+    trace = FaultTrace(events=[
+        FaultEvent(step=4, kind=SLOWDOWN, targets=(0,), duration=6)])
+    slow = _engine(cfg, params, reqs, workers=1, slots=2,
+                   chaos=ChaosEngine(trace))
+    assert slow.metrics.slowdown_events == 1
+    assert slow.step_no > clean.step_no   # the stall cost real steps
+    assert len(slow.completed) == len(reqs)
+    for rid in clean.completed:
+        assert clean.completed[rid] == slow.completed[rid], rid
+    assert slow.metrics.failures == 0     # no state was lost
+
+
+def test_serve_capacity_loss_sheds_hopeless_only(serve_setup):
+    """Deadline-aware degraded mode: queued hedges collapse and provably
+    hopeless requests are shed — but nothing past its first token."""
+    cfg, params = serve_setup
+    reqs = [_req(0, 8, 8, vocab=cfg.vocab_size, seed=1),
+            _req(1, 8, 8, deadline=3, vocab=cfg.vocab_size, seed=1),
+            _req(2, 8, 8, deadline=200, vocab=cfg.vocab_size, seed=1)]
+    trace = FaultTrace(events=[
+        FaultEvent(step=2, kind=CAPACITY_LOSS, targets=(1,), duration=30)])
+    engine = _engine(cfg, params, reqs, workers=2, slots=1,
+                     policy=uniform_policy(2), chaos=ChaosEngine(trace))
+    m = engine.metrics
+    assert m.capacity_events == 1
+    # rid 1 can never finish by step 3 (needs >= 6 steps): shed, not run
+    assert 1 in engine.shed and 1 not in engine.completed
+    assert m.shed == 1 and m.records[1].shed_step is not None
+    assert m.hedge_drops >= 1             # queued copies collapsed to one
+    assert 0 in engine.completed and 2 in engine.completed
+    assert m.past_first_token_drops == 0  # the tripwire
+
+
+def test_serve_snapshot_corrupt_falls_back_to_reprefill(serve_setup):
+    """A corrupted decode snapshot must fail its checksum at resume time and
+    the request re-prefills from scratch — same final tokens, never garbage
+    state."""
+    cfg, params = serve_setup
+    reqs = [_req(0, 10, 12, vocab=cfg.vocab_size, seed=5)]
+    clean = _engine(cfg, params, reqs, workers=1, slots=1,
+                    snapshot_lambda=3)
+    trace = FaultTrace(events=[
+        FaultEvent(step=6, kind=SNAPSHOT_CORRUPT, seed=123),
+        FaultEvent(step=6, kind=HOST_CRASH, targets=(0,), duration=2)])
+    faulty = _engine(cfg, params, reqs, workers=1, slots=1,
+                     snapshot_lambda=3, chaos=ChaosEngine(trace))
+    m = faulty.metrics
+    assert m.snapshots_corrupted == 1
+    assert m.snapshot_restore_failures == 1   # checksum caught it
+    assert m.restores == 0                    # corrupt snapshot never used
+    assert m.resubmissions == 1
+    assert faulty.completed[0] == clean.completed[0]
+
+
+def test_serve_chaos_trace_replay_is_identical(serve_setup):
+    """Two runs over one recorded trace (host crashes included) produce the
+    same tokens and the same counters — the record/replay guarantee."""
+    cfg, params = serve_setup
+    reqs = [_req(i, 6 + 3 * i, 12, vocab=cfg.vocab_size, seed=9)
+            for i in range(3)]
+    trace = sample_trace("unstable", horizon=80, n_targets=2, seed=5,
+                         kinds=SERVE_KINDS)
+    assert trace.kinds() & {HOST_CRASH}
+    runs = [_engine(cfg, params, reqs, chaos=ChaosEngine(trace))
+            for _ in range(2)]
+    a, b = (r.metrics.summary(r.step_no) for r in runs)
+    assert a == b
+    assert runs[0].completed == runs[1].completed
+    assert runs[0].metrics.past_first_token_drops == 0
+
+
+def test_queue_drop_hedges_spares_resubmissions():
+    q = AdmissionQueue()
+    r0, r1 = _req(0, 4, 4), _req(1, 4, 4)
+    q.submit(WorkItem(r0, copy_id=0))
+    q.submit(WorkItem(r0, copy_id=1))
+    q.submit(WorkItem(r1, copy_id=0))
+    q.submit(WorkItem(r1, copy_id=0, is_resubmission=True))  # jumps head
+    # r0's second copy and r1's plain copy (hedging the resubmission) go;
+    # the resubmission itself and one copy per request survive
+    assert q.drop_hedges() == 2
+    kept = [(it.req.rid, it.is_resubmission) for it in q.items()]
+    assert kept == [(1, True), (0, False)]
