@@ -14,9 +14,13 @@ A cell *survives* when every request is accounted for (completed or
 deliberately shed, never dropped past its first token) respectively when
 training reaches the target step with only finite losses.  Cells whose
 sampled trace would be empty get one forced event so every recovery path is
-exercised; ``ckpt_corrupt`` / ``snapshot_corrupt`` events are paired with a
-follow-up ``host_crash`` so the corrupted state is actually *read* (the
-fallback is the interesting part, not the flip).
+exercised; ``ckpt_corrupt`` / ``snapshot_corrupt`` / ``disk_full`` events
+are paired with a follow-up ``host_crash`` so the corrupted (resp. pruned)
+state is actually *read* (the fallback is the interesting part, not the
+flip).  The ``train/net_partition`` cell runs a 3-pod
+``repro.ft.PodTrainingCluster`` against a fault-free reference and demands
+the healed pods land bit-identical to it at equal step count with zero
+split-brain fingerprint divergences.
 
 Record/replay: ``--record DIR`` writes each cell's trace as JSON;
 ``--replay DIR`` re-runs from those files with **no RNG at all** — two
@@ -41,14 +45,14 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.chaos import (CHAOS_PROFILES, CKPT_CORRUPT,  # noqa: E402
-                         HOST_CRASH, SERVE_KINDS, SNAPSHOT_CORRUPT,
-                         TRAIN_KINDS, ChaosEngine, FaultEvent, FaultTrace,
-                         sample_trace)
+                         DISK_FULL, HOST_CRASH, NET_PARTITION, SERVE_KINDS,
+                         SNAPSHOT_CORRUPT, TRAIN_KINDS, ChaosEngine,
+                         FaultEvent, FaultTrace, sample_trace)
 from repro.configs import get_config  # noqa: E402
 from repro.data import DataConfig, SyntheticTokenPipeline  # noqa: E402
 from repro.distributed.steps import make_train_step  # noqa: E402
 from repro.ft import (CheckpointStore, DynamicInterval,  # noqa: E402
-                      TrainingCoordinator)
+                      PodTrainingCluster, TrainingCoordinator, tree_digest)
 from repro.models import lm  # noqa: E402
 from repro.optim import AdamWConfig, adamw_init  # noqa: E402
 from repro.serve import (EngineConfig, Request, ServeEngine,  # noqa: E402
@@ -74,7 +78,9 @@ def cell_trace(profile: str, layer: str, kind: str, *, horizon: int,
             step=horizon // 3, kind=kind, targets=(0,), duration=mttr,
             seed=seed * 7919 + 1))
         trace.meta["forced"] = True
-    if kind in (CKPT_CORRUPT, SNAPSHOT_CORRUPT):
+    # disk_full joins the paired-crash set: the follow-up restore must read
+    # the committed index *after* the prune-and-retry rewrote it
+    if kind in (CKPT_CORRUPT, SNAPSHOT_CORRUPT, DISK_FULL):
         crashes = [FaultEvent(step=ev.step + CRASH_LAG, kind=HOST_CRASH,
                               targets=tuple(range(n_targets)),
                               duration=mttr, seed=ev.seed + 1)
@@ -151,7 +157,8 @@ def run_train_cell(cfg, trace: FaultTrace, *, n_steps: int,
             chaos=ChaosEngine(trace))
         rep = coord.run(n_steps)
     survived = (rep.steps_completed == n_steps
-                and bool(np.all(np.isfinite(rep.losses))))
+                and bool(np.all(np.isfinite(rep.losses)))
+                and rep.index_violations == 0)
     return {
         "layer": "train", "fault": trace.meta["cell"],
         "events": float(len(trace)), "survived": float(survived),
@@ -163,6 +170,55 @@ def run_train_cell(cfg, trace: FaultTrace, *, n_steps: int,
         "slowdowns": float(rep.slowdowns),
         "backoff": float(rep.backoff_steps),
         "wasted": float(rep.wasted_steps),
+        "disk_full": float(rep.disk_full_events),
+        "enospc_retries": float(rep.enospc_retries),
+        "index_viol": float(rep.index_violations),
+    }
+
+
+def run_partition_cell(cfg, trace: FaultTrace, *, n_steps: int,
+                       seed: int) -> dict:
+    """net_partition cell: a 3-pod :class:`PodTrainingCluster` rides the
+    trace (quorum trains, minority parks, heal catches up from the quorum
+    checkpoint) next to a fault-free reference cluster.  The cell survives
+    only when the healed cluster's pods all land **bit-identical** to the
+    reference params at equal applied-step count, with zero split-brain
+    fingerprint divergences and a clean committed-index audit."""
+    def build(chaos, ckpt_dir):
+        return PodTrainingCluster(
+            cfg=cfg, params=lm.init_params(jax.random.key(seed), cfg),
+            pipeline=SyntheticTokenPipeline(DataConfig(2, 32, seed=seed),
+                                            cfg),
+            store=CheckpointStore(ckpt_dir), n_pods=3, ckpt_every=4,
+            chaos=chaos)
+
+    with tempfile.TemporaryDirectory() as da, \
+            tempfile.TemporaryDirectory() as db:
+        cluster = build(ChaosEngine(trace), da)
+        rep = cluster.run(n_steps)
+        reference = build(None, db)
+        ref = reference.run(n_steps)
+        ref_digest = tree_digest(reference.params[0])
+        bit_identical = all(tree_digest(cluster.params[p]) == ref_digest
+                            for p in range(cluster.n_pods))
+    survived = (rep.steps_completed == n_steps
+                and ref.steps_completed == n_steps
+                and rep.split_brain_divergences == 0
+                and bit_identical
+                and bool(np.all(np.isfinite(rep.losses)))
+                and rep.index_violations == 0)
+    return {
+        "layer": "train", "fault": trace.meta["cell"],
+        "events": float(len(trace)), "survived": float(survived),
+        "steps": float(rep.steps_completed),
+        "rounds": float(rep.rounds),
+        "partitions": float(rep.partitions),
+        "parked": float(rep.parked_pod_rounds),
+        "heals": float(rep.heals),
+        "catchups": float(rep.catchups),
+        "fp_div": float(rep.split_brain_divergences),
+        "bit_identical": float(bit_identical),
+        "index_viol": float(rep.index_violations),
     }
 
 
@@ -181,8 +237,10 @@ def run_matrix(args) -> list[dict]:
         if args.replay:
             trace = FaultTrace.load(trace_path(args.replay, layer, kind))
         else:
+            n_targets = (4 if layer == "serve"
+                         else 3 if kind == NET_PARTITION else 1)
             trace = cell_trace(args.profile, layer, kind, horizon=horizon,
-                               n_targets=4 if layer == "serve" else 1,
+                               n_targets=n_targets,
                                seed=args.seed * 101 + i)
         if args.record:
             os.makedirs(args.record, exist_ok=True)
@@ -191,6 +249,9 @@ def run_matrix(args) -> list[dict]:
             rows.append(run_serve_cell(
                 cfg, serve_params, trace, n_requests=args.requests,
                 max_steps=args.max_steps, seed=args.seed))
+        elif kind == NET_PARTITION:
+            rows.append(run_partition_cell(cfg, trace, n_steps=args.steps,
+                                           seed=args.seed))
         else:
             rows.append(run_train_cell(cfg, trace, n_steps=args.steps,
                                        seed=args.seed))
@@ -232,7 +293,11 @@ def main() -> None:
                   ("restores", "restore"), ("ckpt_fallbacks", "fallback"),
                   ("ckpt_corruptions", "corrupt"),
                   ("nan_rollbacks", "nanroll"), ("slowdowns", "slow"),
-                  ("backoff", "backoff"), ("wasted", "wasted")]
+                  ("backoff", "backoff"), ("wasted", "wasted"),
+                  ("disk_full", "dskfull"), ("enospc_retries", "enospc"),
+                  ("parked", "parked"), ("catchups", "catchup"),
+                  ("fp_div", "fpdiv"), ("bit_identical", "bitid"),
+                  ("index_viol", "idxviol")]
     print("== serve ==")
     print(format_table([r for r in rows if r["layer"] == "serve"],
                        serve_cols))

@@ -8,8 +8,13 @@ each one exercises — and makes every chaos run exactly reproducible:
 
 * **Taxonomy**: ``host_crash``, ``slowdown`` (straggler), ``capacity_loss``
   (k workers down for an MTTR window), ``ckpt_corrupt`` (torn training
-  checkpoint shard), ``snapshot_corrupt`` (corrupt decode snapshot), and
-  ``nan_poison`` (NaN/Inf train-step output).
+  checkpoint shard), ``snapshot_corrupt`` (corrupt decode snapshot),
+  ``nan_poison`` (NaN/Inf train-step output), ``net_partition`` (split-brain
+  between ``repro.ft.crosspod`` pods: quorum trains on, minority parks and
+  catches up from the quorum's checkpoint on heal), and ``disk_full``
+  (checkpoint save hits ENOSPC mid-write: the store prunes its oldest
+  committed indices and retries without ever corrupting the committed
+  index).
 * **Record**: ``sample_trace(profile, horizon=..., seed=...)`` draws a
   :class:`~repro.chaos.faults.FaultTrace` from the Section 4.1 Weibull/
   log-normal distributions (per-class MTBF scaled by the stable / normal /
@@ -25,24 +30,28 @@ Consumers: ``repro.ft.coordinator.TrainingCoordinator(chaos=...)`` and
 / ``--chaos-record PATH`` / ``--chaos-trace PATH``.
 """
 from .faults import (CAPACITY_LOSS, CHAOS_PROFILES, CKPT_CORRUPT,
-                     FAULT_KINDS, HOST_CRASH, NAN_POISON, SERVE_KINDS,
-                     SLOWDOWN, SNAPSHOT_CORRUPT, TRAIN_KINDS, ChaosEngine,
-                     FaultEvent, FaultTrace, corrupt_checkpoint_shard,
-                     flip_bytes, sample_trace)
+                     DISK_FULL, FAULT_KINDS, HOST_CRASH, NAN_POISON,
+                     NET_PARTITION, SERVE_KINDS, SLOWDOWN, SNAPSHOT_CORRUPT,
+                     TRACE_VERSION, TRAIN_KINDS, ChaosEngine, FaultEvent,
+                     FaultTrace, corrupt_checkpoint_shard, flip_bytes,
+                     sample_trace)
 
 __all__ = [
     "CAPACITY_LOSS",
     "CHAOS_PROFILES",
     "CKPT_CORRUPT",
     "ChaosEngine",
+    "DISK_FULL",
     "FAULT_KINDS",
     "FaultEvent",
     "FaultTrace",
     "HOST_CRASH",
     "NAN_POISON",
+    "NET_PARTITION",
     "SERVE_KINDS",
     "SLOWDOWN",
     "SNAPSHOT_CORRUPT",
+    "TRACE_VERSION",
     "TRAIN_KINDS",
     "corrupt_checkpoint_shard",
     "flip_bytes",

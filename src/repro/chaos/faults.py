@@ -1,30 +1,47 @@
 """Fault taxonomy, deterministic sampling, and record/replay traces.
 
-The taxonomy (one constant per fault class; ``FAULT_KINDS`` is the full
-list):
+The taxonomy — one constant per fault class, ``FAULT_KINDS`` is the full
+list.  Each class maps to exactly one recovery path owned by one layer:
 
-``host_crash``
-    A whole worker/host dies mid-step (the paper's original fault model).
-    Recovery path: checkpoint/snapshot restore + resubmission.
-``slowdown``
-    A transient straggler: the target runs slower for ``duration`` steps but
-    loses no state.  Recovery path: stalled decode slots resume where they
-    left off (serving) / virtual-time penalty (training).
-``capacity_loss``
-    ``len(targets)`` workers go down simultaneously for ``duration`` steps
-    (an MTTR window).  Recovery path: deadline-aware load shedding in the
-    admission queue — degraded-mode serving instead of unbounded queueing.
-``ckpt_corrupt``
-    A torn/corrupt shard in the newest committed training checkpoint.
-    Recovery path: ``CheckpointStore.restore`` quarantines the bad shard and
-    falls back to the newest checkpoint whose shards verify.
-``snapshot_corrupt``
-    A stored decode snapshot is corrupted in host memory.  Recovery path:
-    the engine detects the checksum mismatch at restore time and falls back
-    to a from-scratch re-prefill.
-``nan_poison``
-    A train-step output is poisoned with NaN/Inf.  Recovery path: the
-    coordinator's NaN guard rejects the update and skips the poisoned batch.
+=================== ========================================= ==============
+class               recovery path                             owning layer
+=================== ========================================= ==============
+``host_crash``      checkpoint/snapshot restore +             serve + train
+                    resubmission (the paper's original
+                    fault model)
+``slowdown``        stalled decode slots resume where they    serve + train
+                    left off / virtual-time straggler
+                    penalty; no state lost
+``capacity_loss``   deadline-aware load shedding plus         serve
+                    queue-length-priced admission
+                    (reject-on-arrival with ``retry_after``)
+                    keep the queue bounded; training treats
+                    it as an outage window
+``ckpt_corrupt``    ``CheckpointStore.restore`` quarantines   train
+                    the bad shard and falls back to the
+                    newest checkpoint whose shards verify
+``snapshot_corrupt`` checksum mismatch detected at resume;    serve
+                    the request re-prefills from scratch
+``nan_poison``      the coordinator's NaN guard rejects the   train
+                    update and quarantines the poisoned
+                    batch index
+``net_partition``   the majority pod component (quorum)       train (crosspod)
+                    keeps training on its own averaged
+                    gradients, minority pods park; on heal
+                    stale pods restore the quorum's latest
+                    committed checkpoint with error-feedback
+                    residuals reset (no compression-bias
+                    leak across the partition)
+``disk_full``       the async checkpoint ``_write`` hits      train (ckpt
+                    ENOSPC mid-save; the store prunes the     store)
+                    oldest committed indices and retries —
+                    the atomic pointer flip means the
+                    committed index is never corrupted
+=================== ========================================= ==============
+
+``net_partition`` events carry the *minority* pod set as ``targets`` and the
+partition window as ``duration``; ``disk_full`` events arm the next
+checkpoint save with an injected ENOSPC.
 
 Trace format (``FaultTrace.to_json``)::
 
@@ -63,9 +80,12 @@ __all__ = [
     "CKPT_CORRUPT",
     "SNAPSHOT_CORRUPT",
     "NAN_POISON",
+    "NET_PARTITION",
+    "DISK_FULL",
     "FAULT_KINDS",
     "SERVE_KINDS",
     "TRAIN_KINDS",
+    "TRACE_VERSION",
     "CHAOS_PROFILES",
     "FaultEvent",
     "FaultTrace",
@@ -81,12 +101,17 @@ CAPACITY_LOSS = "capacity_loss"
 CKPT_CORRUPT = "ckpt_corrupt"
 SNAPSHOT_CORRUPT = "snapshot_corrupt"
 NAN_POISON = "nan_poison"
+NET_PARTITION = "net_partition"
+DISK_FULL = "disk_full"
 
 FAULT_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, CKPT_CORRUPT,
-               SNAPSHOT_CORRUPT, NAN_POISON)
+               SNAPSHOT_CORRUPT, NAN_POISON, NET_PARTITION, DISK_FULL)
 #: kinds each layer consumes (the other layer's kinds are no-ops there)
 SERVE_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, SNAPSHOT_CORRUPT)
-TRAIN_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, CKPT_CORRUPT, NAN_POISON)
+TRAIN_KINDS = (HOST_CRASH, SLOWDOWN, CAPACITY_LOSS, CKPT_CORRUPT, NAN_POISON,
+               NET_PARTITION, DISK_FULL)
+
+TRACE_VERSION = 1
 
 # Per-class MTBF in steps, mirroring repro.serve.replicas.SERVE_ENVIRONMENTS:
 # stability drops -> every fault class strikes more often and repairs slower.
@@ -95,19 +120,20 @@ CHAOS_PROFILES: dict[str, dict] = {
         "shape": 12.5, "mttr_steps": 8,
         "mtbf": {HOST_CRASH: 800.0, SLOWDOWN: 600.0, CAPACITY_LOSS: 4000.0,
                  SNAPSHOT_CORRUPT: 3000.0, CKPT_CORRUPT: 3000.0,
-                 NAN_POISON: 2500.0},
+                 NAN_POISON: 2500.0, NET_PARTITION: 5000.0,
+                 DISK_FULL: 6000.0},
     },
     "normal": {
         "shape": 12.0, "mttr_steps": 16,
         "mtbf": {HOST_CRASH: 200.0, SLOWDOWN: 150.0, CAPACITY_LOSS: 1000.0,
                  SNAPSHOT_CORRUPT: 800.0, CKPT_CORRUPT: 800.0,
-                 NAN_POISON: 600.0},
+                 NAN_POISON: 600.0, NET_PARTITION: 1500.0, DISK_FULL: 2000.0},
     },
     "unstable": {
         "shape": 11.5, "mttr_steps": 24,
         "mtbf": {HOST_CRASH: 30.0, SLOWDOWN: 45.0, CAPACITY_LOSS: 150.0,
                  SNAPSHOT_CORRUPT: 120.0, CKPT_CORRUPT: 120.0,
-                 NAN_POISON: 90.0},
+                 NAN_POISON: 90.0, NET_PARTITION: 200.0, DISK_FULL: 250.0},
     },
 }
 
@@ -129,7 +155,12 @@ class FaultEvent:
 
     @classmethod
     def from_json(cls, d: dict) -> "FaultEvent":
-        return cls(step=int(d["step"]), kind=str(d["kind"]),
+        kind = str(d["kind"])
+        if kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {kind!r} in trace event {d!r}; "
+                f"known kinds: {', '.join(FAULT_KINDS)}")
+        return cls(step=int(d["step"]), kind=kind,
                    targets=tuple(int(t) for t in d.get("targets", ())),
                    duration=int(d.get("duration", 0)),
                    seed=int(d.get("seed", 0)))
@@ -149,11 +180,16 @@ class FaultTrace:
         return {ev.kind for ev in self.events}
 
     def to_json(self) -> dict:
-        return {"version": 1, "meta": self.meta,
+        return {"version": TRACE_VERSION, "meta": self.meta,
                 "events": [ev.to_json() for ev in self.events]}
 
     @classmethod
     def from_json(cls, d: dict) -> "FaultTrace":
+        version = d.get("version", TRACE_VERSION)
+        if version != TRACE_VERSION:
+            raise ValueError(
+                f"unsupported trace 'version' field: {version!r} (this "
+                f"build replays version {TRACE_VERSION} traces only)")
         return cls(events=[FaultEvent.from_json(e) for e in d["events"]],
                    meta=dict(d.get("meta", {})))
 
@@ -193,6 +229,11 @@ def sample_trace(profile: str | dict, *, horizon: int, n_targets: int = 1,
             k = 1
             if kind == CAPACITY_LOSS and n_targets > 1:
                 k = int(rng.integers(1, n_targets))
+            elif kind == NET_PARTITION:
+                # targets = the minority pod set: strictly less than half the
+                # pods, so the complement always holds quorum
+                max_k = max(1, (n_targets - 1) // 2)
+                k = 1 if max_k == 1 else int(rng.integers(1, max_k + 1))
             targets = tuple(sorted(
                 rng.choice(max(n_targets, 1), size=min(k, max(n_targets, 1)),
                            replace=False).tolist()))

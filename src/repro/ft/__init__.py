@@ -2,8 +2,10 @@ from .checkpoint import CheckpointStore
 from .interval import DynamicInterval
 from .straggler import ReplicationPlanner, HostTelemetry
 from .coordinator import TrainingCoordinator, FaultInjector
-from .crosspod import PodGradientExchange
+from .crosspod import (ClusterReport, ExchangeResult, PodGradientExchange,
+                       PodTrainingCluster, tree_digest)
 
 __all__ = ["CheckpointStore", "DynamicInterval", "ReplicationPlanner",
            "HostTelemetry", "TrainingCoordinator", "FaultInjector",
-           "PodGradientExchange"]
+           "PodGradientExchange", "PodTrainingCluster", "ExchangeResult",
+           "ClusterReport", "tree_digest"]

@@ -29,12 +29,25 @@ Robustness (the ``repro.chaos`` ``ckpt_corrupt`` recovery path):
   (and therefore from the next :meth:`save`/:meth:`restore`), instead of
   leaving a stale pointer with no signal.
 
+Disk-full resilience (the ``repro.chaos`` ``disk_full`` recovery path):
+
+* when a shard write raises ENOSPC mid-save (organically, or injected via
+  :meth:`inject_disk_full`), the store deletes the half-written shards of
+  the failed attempt, **prunes its oldest committed checkpoint** (index
+  first, then shards) to free space, and retries the save;
+* only when no committed history is left to prune does the error propagate;
+* the committed index can never be corrupted by this path: the pointer flip
+  is a single atomic rename that only happens after every shard of the
+  attempt has been written, and :meth:`verify_committed` can audit that
+  every committed index still points at verifying shards.
+
 Async mode overlaps serialization with compute and only the pointer flip is
 synchronous -- the training analogue of "synchronized light-weight
 checkpoints".
 """
 from __future__ import annotations
 
+import errno
 import glob
 import hashlib
 import json
@@ -74,6 +87,10 @@ class CheckpointStore:
         self.quarantined: list[dict] = []
         # committed indices skipped during the most recent restore()
         self.last_restore_fallbacks = 0
+        # disk-full path: armed ENOSPC injections + recovery counters
+        self._enospc_armed = 0
+        self.enospc_retries = 0
+        self.pruned_for_space: list[int] = []
 
     # -- paths ---------------------------------------------------------------
     def _index_path(self, step: int) -> str:
@@ -121,22 +138,63 @@ class CheckpointStore:
                     self.root, "host_*", f"step_{step:09d}")):
                 shutil.rmtree(d, ignore_errors=True)
 
+    # -- disk-full (ENOSPC) handling ------------------------------------------
+    def inject_disk_full(self, count: int = 1) -> None:
+        """Arm the next ``count`` shard-write attempts to raise ENOSPC
+        mid-save (the ``repro.chaos`` ``disk_full`` fault)."""
+        self._enospc_armed += max(0, int(count))
+
+    def _drop_step_files(self, step: int) -> None:
+        """Delete the (possibly half-written) shards of an uncommitted
+        attempt; never touches the committed index."""
+        for d in glob.glob(os.path.join(
+                self.root, "host_*", f"step_{step:09d}")):
+            shutil.rmtree(d, ignore_errors=True)
+
+    def _prune_oldest_for_space(self, protect: int) -> bool:
+        """Free space by retiring the oldest committed checkpoint (index
+        first, then shards).  ``protect`` is the step being written — its
+        predecessor history is fair game, the in-flight step is not."""
+        candidates = [s for s in self._list_committed() if s != protect]
+        if not candidates:
+            return False
+        victim = candidates[0]
+        try:
+            os.remove(self._index_path(victim))
+        except OSError:
+            pass
+        self._drop_step_files(victim)
+        self.pruned_for_space.append(victim)
+        log.warning("checkpoint step %d pruned to free disk space", victim)
+        return True
+
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree, *, extra: dict | None = None,
              sync: bool = True) -> dict:
         """Write shards + commit the pointer index.  ``tree`` is any pytree
         of arrays; leaves are round-robined across hosts (stand-in for "each
-        host writes its local shards")."""
+        host writes its local shards").
+
+        A shard write that raises ENOSPC aborts the attempt *before* the
+        pointer flip: the half-written shards are deleted, the oldest
+        committed checkpoint is pruned to free space, and the save retries.
+        The error propagates only when no committed history remains to
+        prune, and the committed index is consistent either way."""
         self.wait()
         leaves, _ = _leaf_paths(tree)
 
-        def _write() -> dict:
+        def _write_once() -> dict:
             index = {"step": step, "extra": extra or {}, "leaves": {}}
             for i, (name, leaf) in enumerate(leaves):
                 host = i % self.n_hosts
                 arr = np.asarray(leaf)
                 fname = hashlib.sha1(name.encode()).hexdigest()[:16] + ".npy"
                 fpath = os.path.join(self._host_dir(host, step), fname)
+                if self._enospc_armed and i >= len(leaves) // 2:
+                    self._enospc_armed -= 1
+                    raise OSError(errno.ENOSPC,
+                                  "No space left on device (injected)",
+                                  fpath)
                 with open(fpath, "wb") as f:
                     np.save(f, arr)
                 digest = hashlib.sha1(arr.tobytes()).hexdigest()
@@ -150,6 +208,20 @@ class CheckpointStore:
             os.replace(tmp, self._index_path(step))   # atomic pointer flip
             self._prune()
             return index
+
+        def _write() -> dict:
+            while True:
+                try:
+                    return _write_once()
+                except OSError as e:
+                    if e.errno != errno.ENOSPC:
+                        raise
+                    self._drop_step_files(step)
+                    if not self._prune_oldest_for_space(step):
+                        raise
+                    self.enospc_retries += 1
+                    log.warning("checkpoint save step %d hit ENOSPC; "
+                                "pruned oldest commit and retrying", step)
 
         if sync:
             return _write()
@@ -251,3 +323,28 @@ class CheckpointStore:
             f"no committed checkpoint passed verification under {self.root} "
             f"(bad shards quarantined to {self._quarantine_dir()}): "
             + "; ".join(errors))
+
+    def verify_committed(self) -> list[str]:
+        """Audit every committed index: each must parse and every shard it
+        points at must exist and match its content hash.  Returns the list
+        of violations (empty = the committed index is fully consistent) —
+        the ``disk_full`` invariant check."""
+        problems: list[str] = []
+        for step in self.committed_steps():
+            try:
+                index = self.read_index(step)
+            except (OSError, ValueError) as e:
+                problems.append(f"step {step}: unreadable index ({e})")
+                continue
+            for name, meta in sorted(index["leaves"].items()):
+                try:
+                    with open(meta["file"], "rb") as f:
+                        arr = np.load(f)
+                except OSError as e:
+                    problems.append(f"step {step}: shard {name} missing "
+                                    f"({e})")
+                    continue
+                if hashlib.sha1(arr.tobytes()).hexdigest() != meta["sha1"]:
+                    problems.append(
+                        f"step {step}: shard {name} checksum mismatch")
+        return problems

@@ -27,7 +27,15 @@ Chaos hardening (the ``repro.chaos`` training-side recovery paths):
 * a ``ckpt_corrupt`` fault flips bytes in the newest committed checkpoint
   shard; the subsequent restore transparently falls back to the newest
   checkpoint that verifies (``CheckpointStore`` quarantine path);
-* a ``slowdown`` fault costs virtual time (a straggler) but loses no state.
+* a ``slowdown`` fault costs virtual time (a straggler) but loses no state;
+* a ``net_partition`` fault on the single-actor coordinator is the
+  degenerate one-pod cluster case: no quorum exists, so the whole cluster
+  *parks* for the partition window (virtual time lost, no state) — the real
+  quorum/minority split lives in ``repro.ft.crosspod.PodTrainingCluster``;
+* a ``disk_full`` fault arms the store's next save with a mid-write ENOSPC
+  and forces a checkpoint through it: the store prunes its oldest commit
+  and retries, and the committed index stays consistent
+  (``CheckpointStore.verify_committed``).
 """
 from __future__ import annotations
 
@@ -38,9 +46,9 @@ from typing import Callable
 
 import numpy as np
 
-from repro.chaos.faults import (CAPACITY_LOSS, CKPT_CORRUPT, HOST_CRASH,
-                                NAN_POISON, SLOWDOWN,
-                                corrupt_checkpoint_shard)
+from repro.chaos.faults import (CAPACITY_LOSS, CKPT_CORRUPT, DISK_FULL,
+                                HOST_CRASH, NAN_POISON, NET_PARTITION,
+                                SLOWDOWN, corrupt_checkpoint_shard)
 
 from .checkpoint import CheckpointStore
 from .interval import DynamicInterval
@@ -121,6 +129,11 @@ class CoordinatorReport:
     ckpt_fallbacks: int = 0      # restores that skipped a corrupt checkpoint
     ckpt_corruptions: int = 0    # injected ckpt_corrupt events applied
     slowdowns: int = 0           # straggler events absorbed
+    partitions: int = 0          # net_partition windows parked through
+    parked_steps: float = 0.0    # virtual steps lost to partition parking
+    disk_full_events: int = 0    # injected ENOSPC saves
+    enospc_retries: int = 0      # saves that pruned-and-retried past ENOSPC
+    index_violations: int = 0    # committed-index audit failures (must be 0)
 
 
 class TrainingCoordinator:
@@ -171,7 +184,8 @@ class TrainingCoordinator:
     def run(self, n_steps: int) -> CoordinatorReport:
         failures = restores = wasted = ckpts = 0
         nan_rollbacks = skipped = slowdowns = corruptions = fallbacks = 0
-        backoff_steps = 0.0
+        partitions = disk_full_events = 0
+        backoff_steps = parked = 0.0
         losses: list[float] = []
         self._save(sync=True)
         ckpts += 1
@@ -201,6 +215,22 @@ class TrainingCoordinator:
                             corruptions += 1
                     elif ev.kind == NAN_POISON:
                         poison = True
+                    elif ev.kind == NET_PARTITION:
+                        # degenerate single-pod cluster: no quorum on the
+                        # other side of the cut -> whole-cluster park for
+                        # the window (wall clock lost, no state lost)
+                        partitions += 1
+                        parked += ev.duration
+                        virtual_t += ev.duration * self.step_time_s
+                    elif ev.kind == DISK_FULL:
+                        # arm the next save with a mid-write ENOSPC and
+                        # push a checkpoint through it immediately: the
+                        # store must prune-and-retry, never corrupt the
+                        # committed index
+                        self.store.inject_disk_full()
+                        disk_full_events += 1
+                        self._save(sync=False)
+                        ckpts += 1
             if self.injector is not None and self.injector.consume(step):
                 crash = True
             if crash:
@@ -253,4 +283,8 @@ class TrainingCoordinator:
             final_loss=losses[-1] if losses else float("nan"), losses=losses,
             nan_rollbacks=nan_rollbacks, skipped_batches=skipped,
             backoff_steps=float(backoff_steps), ckpt_fallbacks=fallbacks,
-            ckpt_corruptions=corruptions, slowdowns=slowdowns)
+            ckpt_corruptions=corruptions, slowdowns=slowdowns,
+            partitions=partitions, parked_steps=float(parked),
+            disk_full_events=disk_full_events,
+            enospc_retries=self.store.enospc_retries,
+            index_violations=len(self.store.verify_committed()))

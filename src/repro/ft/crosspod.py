@@ -1,42 +1,195 @@
-"""Compressed cross-pod gradient exchange (DCN-aware, host level).
+"""Partition-tolerant compressed cross-pod gradient exchange.
 
 Inside a pod, gradients reduce over ICI in bf16 (the jit'd step).  *Across*
 pods the DCN link is ~20x slower, so the pod-level reduction sends int8
 gradients with per-tensor scales and error feedback (repro.optim.
 grad_compression): 4x fewer DCN bytes than fp32 with a bias that vanishes
-over steps.  This module is the host-side transport simulation used by the
-tests and the fault_tolerant_train example; on real hardware the exchange
-maps 1:1 onto a DCN allgather of the int8 payloads.
+over steps.  On real hardware the exchange maps 1:1 onto a DCN allgather of
+the int8 payloads.
+
+The DCN is also the part of the fabric that actually *fails*: this module
+models that with a link-reachability matrix over pods.  A ``net_partition``
+fault (``repro.chaos``) severs the minority pods' links, splitting the
+cluster into components:
+
+* the component holding a strict **majority** of pods (the quorum) keeps
+  training on its own averaged gradients — pods run replicated
+  data-parallel (every pod computes the full global batch, the paper's
+  replication heuristic applied at pod granularity), so the quorum average
+  *is* the full-cluster average and a 2-of-3 quorum stays exactly on the
+  3-pod trajectory;
+* minority pods **park**: no compute, no update, error-feedback residuals
+  frozen;
+* with no majority component (a tie, or everything cut) the whole cluster
+  parks — two components may never both advance, which is exactly the
+  split-brain failure mode;
+* on **heal** the quorum commits a synchronous checkpoint (params +
+  optimizer + its error-feedback residual) and every stale pod catches up
+  by restoring it through :class:`~repro.ft.checkpoint.CheckpointStore`'s
+  fallback-capable ``restore``; the stale pod's own residual is *reset*
+  (discarded) and replaced by the quorum's checkpointed one, so
+  compression bias accumulated before the partition cannot leak across it.
+
+Split-brain is not assumed away — it is *detected*: every advancing pod
+fingerprints its post-update parameters each round and
+:meth:`PodGradientExchange.check_round_fingerprints` counts any round where
+two advancing pods disagree.  ``--chaos-assert`` runs require that counter
+to be zero.
 """
 from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
 
 import jax
 import numpy as np
 
+from repro.chaos.faults import DISK_FULL, NET_PARTITION
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.grad_compression import (compress_tree_with_feedback,
                                           decompress_tree)
 
-__all__ = ["PodGradientExchange"]
+from .checkpoint import CheckpointStore
+
+__all__ = ["PodGradientExchange", "ExchangeResult", "PodTrainingCluster",
+           "ClusterReport", "tree_digest"]
+
+
+def tree_digest(tree) -> str:
+    """Order-stable sha1 over a pytree's leaf bytes (the per-round state
+    fingerprint used for split-brain detection)."""
+    h = hashlib.sha1()
+    for leaf in jax.tree.leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeResult:
+    """Outcome of one exchange round.
+
+    ``avg`` is the averaged (decompressed) gradient tree the quorum applies,
+    or ``None`` when no component holds a majority and the whole cluster
+    parks.  ``fingerprint`` digests ``avg`` (the agreed update)."""
+
+    avg: object | None
+    quorum: tuple[int, ...]
+    parked: tuple[int, ...]
+    fingerprint: str | None
 
 
 class PodGradientExchange:
+    """Quorum-gated gradient exchange over an explicit link matrix."""
+
     def __init__(self, n_pods: int):
         self.n_pods = n_pods
         self.residuals = [None] * n_pods   # error-feedback state per pod
         self.bytes_sent_fp32 = 0
         self.bytes_sent_int8 = 0
+        # link-reachability matrix: links[i, j] == the DCN path i <-> j is up
+        self.links = np.ones((n_pods, n_pods), bool)
+        self._cut: set[int] = set()
+        self.round_no = 0
+        self.parked_pod_rounds = 0
+        self.split_brain_divergences = 0
+        self.fingerprint_log: list[tuple[int, str]] = []
 
-    def _init_residuals(self, pod: int, grads):
+    # -- link topology --------------------------------------------------------
+    def partition(self, minority) -> tuple[int, ...]:
+        """Sever every link of each ``minority`` pod (conservative model:
+        a cut pod is fully isolated, including from other cut pods)."""
+        cut = tuple(sorted({int(p) % self.n_pods for p in minority}))
+        for p in cut:
+            self._cut.add(p)
+            self.links[p, :] = False
+            self.links[:, p] = False
+            self.links[p, p] = True
+        return cut
+
+    def restore_pods(self, pods) -> None:
+        """Heal: re-attach ``pods`` to every pod that is not itself cut."""
+        for p in pods:
+            self._cut.discard(int(p))
+        for p in (int(q) for q in pods):
+            for q in range(self.n_pods):
+                up = q not in self._cut
+                self.links[p, q] = self.links[q, p] = up
+            self.links[p, p] = True
+
+    def components(self) -> list[tuple[int, ...]]:
+        """Connected components of the link matrix (BFS)."""
+        seen: set[int] = set()
+        out = []
+        for start in range(self.n_pods):
+            if start in seen:
+                continue
+            comp = {start}
+            stack = [start]
+            while stack:
+                i = stack.pop()
+                for j in range(self.n_pods):
+                    if j not in comp and self.links[i, j]:
+                        comp.add(j)
+                        stack.append(j)
+            seen |= comp
+            out.append(tuple(sorted(comp)))
+        return out
+
+    def current_quorum(self) -> tuple[int, ...] | None:
+        """The unique component holding a strict majority of pods, if any."""
+        for comp in self.components():
+            if 2 * len(comp) > self.n_pods:
+                return comp
+        return None
+
+    # -- error-feedback residuals ---------------------------------------------
+    def _init_residuals(self, pod: int, grads) -> None:
         if self.residuals[pod] is None:
             self.residuals[pod] = jax.tree.map(
                 lambda g: np.zeros(g.shape, np.float32), grads)
 
-    def exchange(self, pod_grads: list):
-        """pod_grads[p] = gradient pytree from pod p.  Returns the averaged
-        (decompressed) gradient tree every pod ends up with."""
+    def reset_residual(self, pod: int) -> None:
+        """Discard a pod's error-feedback state (membership change: a
+        rejoining or replacement pod must not carry stale compression
+        bias)."""
+        if self.residuals[pod] is not None:
+            self.residuals[pod] = jax.tree.map(
+                lambda r: np.zeros(np.shape(r), np.float32),
+                self.residuals[pod])
+
+    def set_residual(self, pod: int, residual) -> None:
+        """Adopt a residual (the quorum's checkpointed one, at catch-up)."""
+        self.residuals[pod] = residual
+
+    # -- the exchange ---------------------------------------------------------
+    @staticmethod
+    def _payloads_equal(a, b) -> bool:
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        return len(la) == len(lb) and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(la, lb))
+
+    def round(self, pod_grads: list) -> ExchangeResult:
+        """One exchange round.  ``pod_grads[p]`` is pod ``p``'s gradient
+        pytree (entries for parked pods may be ``None`` — they are never
+        read).  Quorum pods compress-with-feedback, allgather, and average;
+        everyone else parks."""
         assert len(pod_grads) == self.n_pods
+        quorum = self.current_quorum()
+        self.round_no += 1
+        parked = tuple(p for p in range(self.n_pods)
+                       if quorum is None or p not in quorum)
+        self.parked_pod_rounds += len(parked)
+        if quorum is None:
+            return ExchangeResult(avg=None, quorum=(), parked=parked,
+                                  fingerprint=None)
         payloads = []
-        for p, g in enumerate(pod_grads):
+        for p in quorum:
+            g = pod_grads[p]
             self._init_residuals(p, g)
             q, s, r = compress_tree_with_feedback(g, self.residuals[p])
             self.residuals[p] = r
@@ -44,11 +197,228 @@ class PodGradientExchange:
             for leaf in jax.tree.leaves(q):
                 self.bytes_sent_int8 += leaf.size        # int8: 1 B each
                 self.bytes_sent_fp32 += leaf.size * 4
-        # DCN allgather: every pod decompresses every payload and averages
-        trees = [decompress_tree(q, s) for q, s in payloads]
-        avg = jax.tree.map(lambda *xs: sum(xs) / self.n_pods, *trees)
-        return avg
+        # Replicated-agreement fast path: when every member ships the same
+        # bytes (replicated data-parallel with synchronized residuals), the
+        # average IS that common value — independent of quorum size, which
+        # is what keeps a 2-pod quorum bit-exact on the 3-pod trajectory.
+        if all(self._payloads_equal(payloads[0], pl) for pl in payloads[1:]):
+            avg = decompress_tree(*payloads[0])
+        else:
+            trees = [decompress_tree(q, s) for q, s in payloads]
+            avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
+        return ExchangeResult(avg=avg, quorum=quorum, parked=parked,
+                              fingerprint=tree_digest(avg))
+
+    def exchange(self, pod_grads: list):
+        """Fully-connected compatibility wrapper: returns the averaged
+        (decompressed) gradient tree every pod ends up with."""
+        res = self.round(list(pod_grads))
+        if res.avg is None:
+            raise RuntimeError(
+                "no quorum: the cluster is partitioned with no majority "
+                "component; all pods are parked")
+        return res.avg
+
+    # -- split-brain detection ------------------------------------------------
+    def check_round_fingerprints(self, rnd: int, pod_fps: dict[int, str]
+                                 ) -> bool:
+        """Record the advancing pods' post-update state fingerprints for one
+        round.  Any disagreement is a split-brain divergence — a hard
+        invariant violation under ``--chaos-assert``."""
+        distinct = sorted(set(pod_fps.values()))
+        if distinct:
+            self.fingerprint_log.append((rnd, distinct[0]))
+        if len(distinct) > 1:
+            self.split_brain_divergences += 1
+            return False
+        return True
 
     @property
     def compression_ratio(self) -> float:
         return self.bytes_sent_fp32 / max(self.bytes_sent_int8, 1)
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    steps_completed: int
+    rounds: int
+    partitions: int
+    parked_pod_rounds: int
+    heals: int
+    catchups: int
+    checkpoints: int
+    split_brain_divergences: int
+    disk_full_events: int
+    enospc_retries: int
+    index_violations: int
+    final_loss: float
+    losses: list
+
+
+class PodTrainingCluster:
+    """``n_pods`` replicated data-parallel pods training through the
+    partition-tolerant exchange.
+
+    Every pod holds its own params/optimizer copy; each round every
+    reachable pod computes the *global* batch's gradients (pod-level
+    replication: the shards are bit-identical anywhere, see
+    ``repro.data``), the quorum averages them through the compressed
+    exchange and applies AdamW, minority pods park.  ``net_partition``
+    chaos events sever links for their ``duration``; at heal the quorum
+    commits a synchronous checkpoint that stale pods restore (params,
+    optimizer, *and* the quorum's error-feedback residual — the stale
+    residual is reset so compression bias cannot leak across the
+    partition).  ``disk_full`` events arm the shared
+    :class:`~repro.ft.checkpoint.CheckpointStore` with a mid-save ENOSPC.
+
+    Two time axes: *rounds* are wall clock (chaos events fire on them);
+    *applied steps* count committed updates and index the data pipeline, so
+    a whole-cluster park consumes wall clock but never skips a batch — a
+    partitioned-then-healed run lands on the exact batch sequence of a
+    fault-free run at equal step count.
+    """
+
+    def __init__(self, *, cfg, params, pipeline, store: CheckpointStore,
+                 n_pods: int = 3, opt_cfg: AdamWConfig | None = None,
+                 q_chunk: int = 16, xent_chunk: int = 16,
+                 ckpt_every: int = 4, chaos=None):
+        self.cfg = cfg
+        self.n_pods = n_pods
+        self.pipeline = pipeline
+        self.store = store
+        self.chaos = chaos   # repro.chaos.ChaosEngine | None
+        self.ckpt_every = max(1, int(ckpt_every))
+        opt_cfg = opt_cfg or AdamWConfig(lr=1e-3)
+
+        def loss_fn(p, batch):
+            loss, metrics = lm.forward_train(p, cfg, batch, q_chunk=q_chunk,
+                                             xent_chunk=xent_chunk)
+            return loss, metrics
+
+        self._grad = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        self._apply = jax.jit(functools.partial(adamw_update, opt_cfg))
+        self.params = [params for _ in range(n_pods)]
+        self.opt = [adamw_init(params) for _ in range(n_pods)]
+        self.exchange = PodGradientExchange(n_pods)
+        resid0 = jax.tree.map(lambda p: np.zeros(p.shape, np.float32),
+                              params)
+        for p in range(n_pods):
+            self.exchange.residuals[p] = resid0
+        self.pod_step = [0] * n_pods      # applied steps each pod has seen
+        self.applied = 0                  # quorum-committed update count
+        self.round_no = 0                 # wall-clock rounds
+        self._heal_at: dict[int, set[int]] = {}
+        self._counters = dict(partitions=0, heals=0, catchups=0,
+                              checkpoints=0, disk_full_events=0)
+
+    # -- checkpoint / catch-up ------------------------------------------------
+    def _commit(self) -> bool:
+        """The quorum lead commits params + opt + its residual (the whole
+        synchronized state a rejoining pod needs).  The lead is the member
+        with the most applied steps — a pod that just rejoined stale must
+        never author the commit its peers catch up from."""
+        quorum = self.exchange.current_quorum()
+        if quorum is None:
+            return False
+        lead = max(quorum, key=lambda p: (self.pod_step[p], -p))
+        step = self.pod_step[lead]
+        self.store.save(step, {
+            "params": self.params[lead], "opt": self.opt[lead],
+            "residual": self.exchange.residuals[lead],
+        }, extra={"applied": step}, sync=True)
+        self._counters["checkpoints"] += 1
+        return True
+
+    def _heal(self, stale: list[int]) -> None:
+        self.exchange.restore_pods(stale)
+        self._counters["heals"] += 1
+        behind = [p for p in stale if self.pod_step[p] < self.applied]
+        if not behind or self.exchange.current_quorum() is None:
+            return
+        # quorum syncs a checkpoint of its *current* state, then each stale
+        # pod restores it via the fallback-capable CheckpointStore path
+        self._commit()
+        for p in behind:
+            like = {"params": self.params[p], "opt": self.opt[p],
+                    "residual": self.exchange.residuals[p]}
+            tree, _, extra = self.store.restore(like)
+            self.params[p], self.opt[p] = tree["params"], tree["opt"]
+            # stale residual reset + quorum residual adopted: no
+            # compression-bias carryover across the partition
+            self.exchange.reset_residual(p)
+            self.exchange.set_residual(p, tree["residual"])
+            self.pod_step[p] = int(extra["applied"])
+            self._counters["catchups"] += 1
+
+    # -- chaos ----------------------------------------------------------------
+    def _apply_chaos(self, rnd: int) -> None:
+        for ev in self.chaos.events_at(rnd):
+            if ev.kind == NET_PARTITION:
+                minority = self.exchange.partition(ev.targets or (0,))
+                self._counters["partitions"] += 1
+                heal = rnd + max(1, ev.duration)
+                self._heal_at.setdefault(heal, set()).update(minority)
+            elif ev.kind == DISK_FULL:
+                self.store.inject_disk_full()
+                self._counters["disk_full_events"] += 1
+                # strike now: force a commit through the armed store (the
+                # ENOSPC prune-and-retry path runs under the quorum's feet)
+                self._commit()
+            # every other kind is owned by the coordinator / serve layers
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, n_steps: int, *, max_rounds: int | None = None
+            ) -> ClusterReport:
+        max_rounds = max_rounds or 4 * n_steps + 64
+        losses: list[float] = []
+        self._commit()   # round-0 partitions must have a commit to land on
+        while self.applied < n_steps and self.round_no < max_rounds:
+            rnd = self.round_no
+            if rnd in self._heal_at:
+                self._heal(sorted(self._heal_at.pop(rnd)))
+            if self.chaos is not None:
+                self._apply_chaos(rnd)
+            quorum = self.exchange.current_quorum()
+            grads: list = [None] * self.n_pods
+            loss = None
+            if quorum is not None:
+                batch = self.pipeline.batch_at(self.applied)
+                for p in quorum:
+                    (loss_p, _), g = self._grad(self.params[p], batch)
+                    grads[p] = g
+                    if loss is None:
+                        loss = float(loss_p)
+            res = self.exchange.round(grads)
+            self.round_no += 1
+            if res.avg is None:
+                continue   # whole-cluster park: wall clock lost, no batch
+            for p in res.quorum:
+                self.params[p], self.opt[p], _ = self._apply(
+                    self.params[p], res.avg, self.opt[p])
+                self.pod_step[p] = self.applied + 1
+            losses.append(loss)
+            self.exchange.check_round_fingerprints(
+                self.applied, {p: tree_digest(self.params[p])
+                               for p in res.quorum})
+            self.applied += 1
+            if self.applied % self.ckpt_every == 0:
+                self._commit()
+        # drain pending heals: the run returns a fully-connected cluster
+        # (a partition still open at the target step heals now and its
+        # stale pods catch up before the final report)
+        while self._heal_at:
+            rnd = min(self._heal_at)
+            self._heal(sorted(self._heal_at.pop(rnd)))
+        return ClusterReport(
+            steps_completed=self.applied, rounds=self.round_no,
+            partitions=self._counters["partitions"],
+            parked_pod_rounds=self.exchange.parked_pod_rounds,
+            heals=self._counters["heals"],
+            catchups=self._counters["catchups"],
+            checkpoints=self._counters["checkpoints"],
+            split_brain_divergences=self.exchange.split_brain_divergences,
+            disk_full_events=self._counters["disk_full_events"],
+            enospc_retries=self.store.enospc_retries,
+            index_violations=len(self.store.verify_committed()),
+            final_loss=losses[-1] if losses else float("nan"),
+            losses=losses)

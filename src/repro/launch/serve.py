@@ -129,7 +129,8 @@ def continuous_main(cfg, mesh, args) -> None:
     with use_rules(mesh):
         params = _sharded_params(cfg, mesh, args.seed)
         engine = ServeEngine(
-            cfg, EngineConfig(cache_len=cache_len, q_chunk=64),
+            cfg, EngineConfig(cache_len=cache_len, q_chunk=64,
+                              max_queue_depth=args.max_queue_depth or None),
             pool=pool, policy=policy, params=params, chaos=chaos)
         for r in reqs:
             engine.submit(r)
@@ -151,7 +152,8 @@ def continuous_main(cfg, mesh, args) -> None:
           f"{s['wasted_tokens']:.0f} tok ({100 * s['wastage_frac']:.1f}%) | "
           f"failures {int(s['failures'])} resubmissions "
           f"{int(s['resubmissions'])} snapshot-restores "
-          f"{int(s['restores'])}")
+          f"{int(s['restores'])} rejected-on-arrival "
+          f"{int(s['rejected_on_arrival'])}")
     if chaos is not None:
         print(f"chaos applied: {dict(chaos.applied_by_kind)} | shed "
               f"{int(s['shed'])} hedge-drops {int(s['hedge_drops'])} "
@@ -239,6 +241,10 @@ def main() -> None:
     ap.add_argument("--policy", choices=("none", "all", "crch"),
                     default="crch")
     ap.add_argument("--max-rep", type=int, default=3)
+    ap.add_argument("--max-queue-depth", type=int, default=0,
+                    help="queue-length-priced admission: reject fresh "
+                         "arrivals with a retry_after hint once the queue "
+                         "holds this many work items (0 = unbounded)")
     ap.add_argument("--env", choices=("none", "stable", "normal", "unstable"),
                     default="none")
     ap.add_argument("--max-steps", type=int, default=20_000)

@@ -6,27 +6,102 @@ the same code end-to-end with ``--tiny`` configs for validation.
 
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --tiny \
         --steps 50 --global-batch 8 --seq-len 128 --ckpt-dir /tmp/ckpt
+
+``--pods N`` (N > 1) switches to the multi-pod cluster mode: N replicated
+data-parallel pods training through the partition-tolerant compressed
+exchange (``repro.ft.crosspod``), with ``net_partition`` / ``disk_full``
+chaos targeting the pod set.  Under ``--chaos-assert`` the run must finish
+with zero split-brain fingerprint divergences, a clean committed-index
+audit, and final params bit-identical to a fault-free reference cluster:
+
+    PYTHONPATH=src python -m repro.launch.train --tiny --pods 3 \
+        --steps 12 --global-batch 2 --seq-len 32 --chaos unstable \
+        --chaos-seed 29 --chaos-assert
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import jax
 import numpy as np
 
-from repro.chaos import TRAIN_KINDS
+from repro.chaos import DISK_FULL, NET_PARTITION, TRAIN_KINDS
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticTokenPipeline
 from repro.distributed import params as pshard
 from repro.distributed.sharding import use_rules
 from repro.distributed.steps import make_train_step
 from repro.ft import (CheckpointStore, DynamicInterval, FaultInjector,
-                      TrainingCoordinator)
+                      PodTrainingCluster, TrainingCoordinator, tree_digest)
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.serve import add_chaos_args, make_chaos
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init
+
+
+def cluster_main(cfg, mesh, args) -> None:
+    """Multi-pod mode: quorum trains through partitions, minority pods park
+    and catch up from the quorum checkpoint at heal."""
+    def build(chaos_engine, ckpt_dir):
+        params = lm.init_params(jax.random.key(args.seed), cfg)
+        pipeline = SyntheticTokenPipeline(
+            DataConfig(args.global_batch, args.seq_len, seed=args.seed), cfg)
+        return PodTrainingCluster(
+            cfg=cfg, params=params, pipeline=pipeline,
+            store=CheckpointStore(ckpt_dir), n_pods=args.pods,
+            opt_cfg=AdamWConfig(lr=args.lr),
+            q_chunk=min(1024, args.seq_len), xent_chunk=512,
+            chaos=chaos_engine)
+
+    chaos = make_chaos(args, kinds=(NET_PARTITION, DISK_FULL),
+                       n_targets=args.pods,
+                       horizon=args.chaos_horizon or args.steps)
+    with use_rules(mesh):
+        cluster = build(chaos, args.ckpt_dir)
+        t0 = time.time()
+        report = cluster.run(args.steps)
+        dt = time.time() - t0
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"pods={args.pods} steps={report.steps_completed} "
+          f"rounds={report.rounds} ckpts={report.checkpoints} "
+          f"compression={cluster.exchange.compression_ratio:.1f}x")
+    print(f"partitions {report.partitions} parked-pod-rounds "
+          f"{report.parked_pod_rounds} heals {report.heals} catchups "
+          f"{report.catchups} disk-full {report.disk_full_events} "
+          f"enospc-retries {report.enospc_retries} | split-brain "
+          f"{report.split_brain_divergences} index-violations "
+          f"{report.index_violations}")
+    if chaos is not None:
+        print(f"chaos applied: {dict(chaos.applied_by_kind)}")
+    print(f"final loss {report.final_loss:.4f} wall={dt:.1f}s "
+          f"({dt / max(report.steps_completed, 1):.2f}s/step)")
+    if args.chaos_assert:
+        assert chaos is not None, "--chaos-assert needs an active chaos run"
+        assert chaos.applied, "chaos trace fired no events"
+        assert report.steps_completed == args.steps, (
+            f"cluster did not survive: {report.steps_completed}/"
+            f"{args.steps} steps")
+        assert report.split_brain_divergences == 0, (
+            f"{report.split_brain_divergences} split-brain fingerprint "
+            "divergence(s): two components advanced independently")
+        assert report.index_violations == 0, (
+            "committed checkpoint index failed its audit after chaos")
+        assert all(np.isfinite(report.losses)), "non-finite loss in cluster"
+        with tempfile.TemporaryDirectory() as ref_dir, use_rules(mesh):
+            reference = build(None, ref_dir)
+            ref = reference.run(args.steps)
+        ref_digest = tree_digest(reference.params[0])
+        mismatched = [p for p in range(args.pods)
+                      if tree_digest(cluster.params[p]) != ref_digest]
+        assert ref.steps_completed == args.steps
+        assert not mismatched, (
+            f"pods {mismatched} are not bit-identical to the fault-free "
+            f"reference after heal (digest {ref_digest[:12]})")
+        print(f"chaos-assert OK: {report.steps_completed} steps, "
+              f"{report.heals} heals, all {args.pods} pods bit-identical "
+              "to the fault-free reference, 0 split-brain divergences")
 
 
 def main() -> None:
@@ -44,6 +119,9 @@ def main() -> None:
                     default="debug")
     ap.add_argument("--inject-mtbf-steps", type=float, default=0.0,
                     help="simulate failures every ~N steps (0 = off)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="N > 1: multi-pod cluster mode through the "
+                         "partition-tolerant exchange")
     ap.add_argument("--seed", type=int, default=0)
     add_chaos_args(ap)
     args = ap.parse_args()
@@ -51,6 +129,9 @@ def main() -> None:
     cfg = get_config(args.arch, tiny=args.tiny)
     mesh = (make_debug_mesh() if args.mesh == "debug" else
             make_production_mesh(multi_pod=(args.mesh == "multi")))
+    if args.pods > 1:
+        cluster_main(cfg, mesh, args)
+        return
 
     with use_rules(mesh):
         params = lm.init_params(jax.random.key(args.seed), cfg)
@@ -90,7 +171,11 @@ def main() -> None:
               f"{report.skipped_batches} ckpt-fallbacks "
               f"{report.ckpt_fallbacks} ckpt-corruptions "
               f"{report.ckpt_corruptions} slowdowns {report.slowdowns} "
-              f"backoff {report.backoff_steps:.0f} steps")
+              f"backoff {report.backoff_steps:.0f} steps | partitions "
+              f"{report.partitions} parked {report.parked_steps:.0f} "
+              f"disk-full {report.disk_full_events} enospc-retries "
+              f"{report.enospc_retries} index-violations "
+              f"{report.index_violations}")
     n = max(1, len(report.losses) // 10)
     first = float(np.mean(report.losses[:n]))
     last = float(np.mean(report.losses[-n:]))
@@ -104,10 +189,13 @@ def main() -> None:
             f"training did not survive: {report.steps_completed}/"
             f"{args.steps} steps")
         assert report.restores > 0, "chaos run exercised no restore path"
+        assert report.index_violations == 0, (
+            "committed checkpoint index failed its audit after chaos")
         assert all(np.isfinite(report.losses)), "non-finite loss escaped the "\
             "NaN guard"
         print(f"chaos-assert OK: {report.steps_completed} steps, "
-              f"{report.restores} restores, all losses finite")
+              f"{report.restores} restores, all losses finite, "
+              "committed index clean")
 
 
 if __name__ == "__main__":

@@ -105,6 +105,10 @@ class EngineConfig:
     # capacity loss (hedge copies collapse first, then provably-late
     # requests are shed lowest-class-first)
     shed_enabled: bool = True
+    # queue-length-priced admission: fresh arrivals are rejected with a
+    # retry_after hint once queue depth crosses this bound, so the queue
+    # stays bounded under sustained capacity loss (None = unbounded)
+    max_queue_depth: int | None = None
 
 
 @dataclasses.dataclass
@@ -147,7 +151,9 @@ class ServeEngine:
         self.params = (params if params is not None
                        else lm.init_params(jax.random.key(seed), cfg))
         self.metrics = metrics or ServeMetrics()
-        self.queue = AdmissionQueue()
+        self.queue = AdmissionQueue(max_depth=self.ecfg.max_queue_depth,
+                                    drain_rate=max(pool.n_slots, 1))
+        self.rejected: dict[int, int] = {}   # rid -> retry_after hint
         self.store = SnapshotStore()
         self.slots = [_Slot(sid) for sid in range(pool.n_slots)]
         self.active: dict[int, set[int]] = {}      # rid -> live slot ids
@@ -180,7 +186,9 @@ class ServeEngine:
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request) -> int:
-        """Enqueue a request; returns its replication count."""
+        """Enqueue a request; returns its replication count (0 = rejected on
+        arrival by the queue-depth bound, with the retry-after hint recorded
+        in ``self.rejected[rid]`` and the ``rejected_on_arrival`` metric)."""
         bucket = prompt_bucket(req.prompt_len)
         offset = self.cfg.n_image_tokens or 0
         if offset + bucket + req.max_new_tokens > self.ecfg.cache_len:
@@ -196,11 +204,15 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.rid}: {self.cfg.name} needs per-request "
                 f"image embeds")
-        self.requests[req.rid] = req
         self.metrics.register(req)
         rep = self.policy.rep_for(req)
-        for k in range(rep):
-            self.queue.submit(WorkItem(req, copy_id=k))
+        retry_after = self.queue.admit(
+            [WorkItem(req, copy_id=k) for k in range(rep)])
+        if retry_after is not None:
+            self.rejected[req.rid] = retry_after
+            self.metrics.mark_rejected(req.rid, self.step_no, retry_after)
+            return 0
+        self.requests[req.rid] = req
         return rep
 
     # -- chaos injection (repro.chaos taxonomy) ------------------------------

@@ -34,6 +34,8 @@ class RequestRecord:
     max_new: int
     completed_step: int | None = None
     shed_step: int | None = None    # load-shed (degraded mode), never ran
+    rejected_step: int | None = None   # rejected on arrival (queue bound)
+    retry_after: int | None = None     # hint returned with the rejection
 
     @property
     def completed(self) -> bool:
@@ -62,6 +64,7 @@ class ServeMetrics:
         self.snapshots = 0
         # degraded-mode / chaos counters
         self.shed = 0                        # requests load-shed whole
+        self.rejected_on_arrival = 0         # queue-depth bound rejections
         self.hedge_drops = 0                 # queued hedge copies dropped
         self.capacity_events = 0
         self.slowdown_events = 0
@@ -84,6 +87,13 @@ class ServeMetrics:
         if rec is not None:
             rec.shed_step = step
         self.shed += 1
+
+    def mark_rejected(self, rid: int, step: int, retry_after: int) -> None:
+        rec = self.records.get(rid)
+        if rec is not None:
+            rec.rejected_step = step
+            rec.retry_after = retry_after
+        self.rejected_on_arrival += 1
 
     # -- summaries -----------------------------------------------------------
     @property
@@ -123,6 +133,7 @@ class ServeMetrics:
             "restores": float(self.restores),
             "snapshots": float(self.snapshots),
             "shed": float(self.shed),
+            "rejected_on_arrival": float(self.rejected_on_arrival),
             "hedge_drops": float(self.hedge_drops),
             "snapshot_restore_failures": float(
                 self.snapshot_restore_failures),

@@ -154,10 +154,21 @@ class AdmissionQueue:
     failed requests jump to the head (Algorithm 3 resubmits "as soon as
     possible").  ``cancel`` drops the pending copies of a request the moment
     one replica completes, so hedges never consume slots posthumously.
+
+    **Queue-length-priced admission**: with ``max_depth`` set, :meth:`admit`
+    rejects a fresh request on arrival once depth has crossed the bound and
+    returns a ``retry_after`` hint (steps until the backlog ahead of the
+    bound drains at ``drain_rate`` tokens/step), so the queue itself stays
+    bounded under sustained capacity loss instead of growing without limit.
+    Resubmissions always bypass the bound — they carry work already paid
+    for.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, max_depth: int | None = None,
+                 drain_rate: float = 1.0) -> None:
         self._items: collections.deque[WorkItem] = collections.deque()
+        self.max_depth = max_depth
+        self.drain_rate = max(float(drain_rate), 1e-9)
 
     def __len__(self) -> int:
         return len(self._items)
@@ -167,6 +178,31 @@ class AdmissionQueue:
             self._items.appendleft(item)
         else:
             self._items.append(item)
+
+    def retry_after_hint(self) -> int:
+        """Steps until enough of the backlog ahead of ``max_depth`` drains
+        for one fresh item to fit (a lower bound: one decoded token per
+        ``1/drain_rate`` steps retires queued work)."""
+        if self.max_depth is None:
+            return 0
+        excess = len(self._items) - self.max_depth + 1
+        if excess <= 0:
+            return 0
+        ahead = [it for i, it in enumerate(self._items) if i < excess]
+        tokens = sum(it.req.max_new_tokens for it in ahead)
+        return max(1, math.ceil(tokens / self.drain_rate))
+
+    def admit(self, items: list[WorkItem]) -> int | None:
+        """All-or-nothing admission of one request's copies.  Returns
+        ``None`` on success, or the ``retry_after`` hint (steps) when the
+        depth bound rejects the arrival."""
+        fresh = items and not any(it.is_resubmission for it in items)
+        if (self.max_depth is not None and fresh
+                and len(self._items) >= self.max_depth):
+            return self.retry_after_hint()
+        for it in items:
+            self.submit(it)
+        return None
 
     def pop(self, admissible=None) -> WorkItem | None:
         """Pop the first item for which ``admissible(item)`` holds."""

@@ -12,6 +12,10 @@ Recovery-path coverage map (one test per taxonomy entry):
                           test_train_ckpt_corrupt_falls_back
 * ``snapshot_corrupt`` -> test_serve_snapshot_corrupt_falls_back_to_reprefill
 * ``nan_poison``       -> test_train_nan_poison_guard_skips_batch
+* ``net_partition``    -> test_train_net_partition_parks_single_actor
+                          (quorum/minority split: tests/test_crosspod.py)
+* ``disk_full``        -> test_store_enospc_prunes_oldest_and_retries /
+                          test_train_disk_full_prunes_and_survives
 """
 import collections
 import os
@@ -20,10 +24,10 @@ import jax
 import numpy as np
 import pytest
 
-from repro.chaos import (CAPACITY_LOSS, CKPT_CORRUPT, HOST_CRASH, NAN_POISON,
-                         SERVE_KINDS, SLOWDOWN, SNAPSHOT_CORRUPT, ChaosEngine,
-                         FaultEvent, FaultTrace, corrupt_checkpoint_shard,
-                         sample_trace)
+from repro.chaos import (CAPACITY_LOSS, CKPT_CORRUPT, DISK_FULL, HOST_CRASH,
+                         NAN_POISON, NET_PARTITION, SERVE_KINDS, SLOWDOWN,
+                         SNAPSHOT_CORRUPT, ChaosEngine, FaultEvent,
+                         FaultTrace, corrupt_checkpoint_shard, sample_trace)
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticTokenPipeline
 from repro.distributed.steps import make_train_step
@@ -103,6 +107,28 @@ def test_sample_trace_deterministic_and_roundtrips(tmp_path):
     only = sample_trace("unstable", horizon=300, seed=11,
                         kinds=(HOST_CRASH,))
     assert only.kinds() == {HOST_CRASH}
+
+
+def test_trace_load_rejects_unknown_version(tmp_path):
+    trace = FaultTrace(events=[FaultEvent(step=1, kind=HOST_CRASH)])
+    path = str(tmp_path / "trace.json")
+    trace.save(path)
+    import json
+    with open(path) as f:
+        d = json.load(f)
+    d["version"] = 99
+    with open(path, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(ValueError, match="'version'"):
+        FaultTrace.load(path)
+
+
+def test_trace_rejects_unknown_fault_kind():
+    trace = FaultTrace(events=[FaultEvent(step=1, kind=HOST_CRASH)])
+    d = trace.to_json()
+    d["events"][0]["kind"] = "gamma_ray"
+    with pytest.raises(ValueError, match="gamma_ray"):
+        FaultTrace.from_json(d)
 
 
 def test_chaos_engine_fires_each_event_exactly_once():
@@ -191,6 +217,37 @@ def test_async_save_errors_surface_from_wait(tmp_path):
     assert store.latest_step() == 3
 
 
+def test_store_enospc_prunes_oldest_and_retries(tmp_path):
+    """A mid-save ENOSPC must free space by pruning the *oldest* committed
+    checkpoint and retry — the committed index stays consistent throughout
+    and the new save lands."""
+    store = CheckpointStore(str(tmp_path))
+    for s in (1, 2, 3):
+        store.save(s, {"w": np.arange(256.0) * s}, extra={"next_index": s})
+    store.inject_disk_full()
+    store.save(4, {"w": np.arange(256.0) * 4}, extra={"next_index": 4},
+               sync=False)
+    store.wait()
+    assert store.enospc_retries == 1
+    assert store.pruned_for_space == [1]      # oldest went first
+    assert store.committed_steps() == [2, 3, 4]
+    assert store.verify_committed() == []     # every index entry verifies
+    tree, step, extra = store.restore({"w": np.zeros(256)})
+    assert step == 4 and extra["next_index"] == 4
+    np.testing.assert_array_equal(tree["w"], np.arange(256.0) * 4)
+
+
+def test_store_enospc_with_nothing_to_prune_raises(tmp_path):
+    """With no older committed checkpoint to free, the ENOSPC surfaces —
+    and commits nothing (no torn index entry)."""
+    store = CheckpointStore(str(tmp_path))
+    store.inject_disk_full()
+    with pytest.raises(OSError):
+        store.save(1, {"w": np.ones(64)})
+    assert store.committed_steps() == []
+    assert store.verify_committed() == []
+
+
 # ----------------------------------------------------- training chaos ----
 
 def test_train_nan_poison_guard_skips_batch(tmp_path, train_setup):
@@ -241,6 +298,39 @@ def test_train_slowdown_and_capacity_loss(tmp_path, train_setup):
     assert rep.steps_completed == 6
     assert rep.slowdowns == 1
     assert rep.failures == 1 and rep.restores == 1   # capacity loss = outage
+
+
+def test_train_disk_full_prunes_and_survives(tmp_path, train_setup):
+    """disk_full + same-step crash: the forced checkpoint hits ENOSPC,
+    prunes-and-retries, and the restore immediately *reads* the rewritten
+    index — which must audit clean."""
+    trace = FaultTrace(events=[
+        FaultEvent(step=3, kind=DISK_FULL),
+        FaultEvent(step=3, kind=HOST_CRASH, duration=2)])
+    coord = _coordinator(train_setup, tmp_path, chaos=ChaosEngine(trace))
+    rep = coord.run(8)
+    assert rep.steps_completed == 8
+    assert rep.disk_full_events == 1
+    assert rep.enospc_retries >= 1            # the save pruned and retried
+    assert rep.index_violations == 0          # committed index never torn
+    assert rep.restores >= 1                  # crash read the pruned index
+    assert all(np.isfinite(rep.losses))
+
+
+def test_train_net_partition_parks_single_actor(tmp_path, train_setup):
+    """On the single-actor coordinator a partition is the degenerate one-pod
+    cluster: no quorum anywhere, so the whole cluster parks for the window —
+    virtual time is lost, state and data order are not."""
+    trace = FaultTrace(events=[FaultEvent(step=2, kind=NET_PARTITION,
+                                          targets=(0,), duration=4)])
+    coord = _coordinator(train_setup, tmp_path, chaos=ChaosEngine(trace))
+    rep = coord.run(6)
+    clean = _coordinator(train_setup, tmp_path, name="clean")
+    ref = clean.run(6)
+    assert rep.steps_completed == 6
+    assert rep.partitions == 1 and rep.parked_steps == pytest.approx(4.0)
+    assert rep.failures == 0 and rep.restores == 0   # no state lost
+    np.testing.assert_array_equal(rep.losses, ref.losses)
 
 
 # ------------------------------------------------------ serving chaos ----
@@ -321,6 +411,57 @@ def test_serve_chaos_trace_replay_is_identical(serve_setup):
     assert a == b
     assert runs[0].completed == runs[1].completed
     assert runs[0].metrics.past_first_token_drops == 0
+
+
+def test_queue_depth_bound_rejects_with_retry_after():
+    q = AdmissionQueue(max_depth=2, drain_rate=2.0)
+    assert q.admit([WorkItem(_req(0, 4, 8))]) is None
+    assert q.admit([WorkItem(_req(1, 4, 8))]) is None
+    hint = q.admit([WorkItem(_req(2, 4, 8))])
+    # excess of 1 item ahead of the bound: 8 tokens at 2 tok/step -> 4 steps
+    assert hint == 4
+    assert len(q) == 2                        # the rejected item never queued
+    # resubmissions carry work already paid for: they bypass the bound
+    assert q.admit([WorkItem(_req(3, 4, 8), is_resubmission=True)]) is None
+    assert len(q) == 3
+
+
+def test_serve_bounded_admission_under_capacity_loss(serve_setup):
+    """Queue-length-priced admission: once the backlog crosses the bound,
+    fresh arrivals are rejected with a retry_after hint instead of growing
+    the queue without limit — and the admitted work still completes through
+    a capacity-loss window."""
+    cfg, params = serve_setup
+    reqs = [_req(i, 8, 8, vocab=cfg.vocab_size, seed=2) for i in range(8)]
+    cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
+                    for r in reqs)
+    pool = WorkerPool(2, 1, mtbf_steps=0.0, mttr_steps=6, seed=0)
+    trace = FaultTrace(events=[FaultEvent(step=2, kind=CAPACITY_LOSS,
+                                          targets=(1,), duration=30)])
+    engine = ServeEngine(
+        cfg, EngineConfig(cache_len=cache_len, q_chunk=32,
+                          snapshot_lambda=4, max_queue_depth=4),
+        pool=pool, policy=uniform_policy(2), params=params,
+        chaos=ChaosEngine(trace))
+    admitted = []
+    for r in reqs:
+        if engine.submit(r):
+            admitted.append(r.rid)
+        # all-or-nothing admits of rep=2 keep depth <= bound - 1 + rep
+        assert len(engine.queue) <= 4 + 1
+    assert admitted == [0, 1]                 # depth 4 reached after two
+    m = engine.metrics
+    assert m.rejected_on_arrival == 6
+    assert set(engine.rejected) == {2, 3, 4, 5, 6, 7}
+    assert all(hint >= 1 for hint in engine.rejected.values())
+    assert m.records[2].rejected_step == 0 and m.records[2].retry_after >= 1
+    assert set(engine.requests) == {0, 1}     # rejected rids never tracked
+    engine.run(max_steps=2_000)
+    s = m.summary(engine.step_no)
+    assert m.capacity_events == 1
+    assert set(engine.completed) == {0, 1}    # admitted work survives chaos
+    assert s["rejected_on_arrival"] == 6.0
+    assert m.past_first_token_drops == 0
 
 
 def test_queue_drop_hedges_spares_resubmissions():

@@ -1,0 +1,176 @@
+"""Partition-tolerant cross-pod exchange tests: quorum election, tie park,
+minority catch-up bit-identity, residual hygiene on membership change."""
+import jax
+import numpy as np
+import pytest
+
+from repro.chaos import NET_PARTITION, ChaosEngine, FaultEvent, FaultTrace
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokenPipeline
+from repro.ft import (CheckpointStore, PodGradientExchange,
+                      PodTrainingCluster, tree_digest)
+from repro.models import lm
+
+
+def _grad(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((16, 16)).astype(np.float32)}
+
+
+@pytest.fixture(scope="module")
+def cluster_setup():
+    cfg = get_config("olmo_1b", tiny=True)
+    params = lm.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _make_cluster(cfg, params, tmpdir, *, chaos=None, n_pods=3):
+    return PodTrainingCluster(
+        cfg=cfg, params=params,
+        pipeline=SyntheticTokenPipeline(DataConfig(2, 32, seed=0), cfg),
+        store=CheckpointStore(str(tmpdir)), n_pods=n_pods, ckpt_every=3,
+        chaos=chaos)
+
+
+# ---------------------------------------------------------------------------
+# quorum election over the link matrix
+# ---------------------------------------------------------------------------
+def test_quorum_election_3_pods_minority_cut():
+    ex = PodGradientExchange(n_pods=3)
+    assert ex.current_quorum() == (0, 1, 2)
+    ex.partition({2})
+    assert ex.components() == [(0, 1), (2,)]
+    assert ex.current_quorum() == (0, 1)
+    res = ex.round([_grad(), _grad(), None])   # parked pod's grads unread
+    assert res.quorum == (0, 1) and res.parked == (2,)
+    assert res.avg is not None and res.fingerprint
+
+
+def test_quorum_election_4_pods():
+    ex = PodGradientExchange(n_pods=4)
+    ex.partition({3})
+    assert ex.current_quorum() == (0, 1, 2)    # 3 of 4 is a strict majority
+    ex.partition({2})                           # now 2 of 4: a tie
+    assert ex.current_quorum() is None
+    ex.restore_pods({2})
+    assert ex.current_quorum() == (0, 1, 2)
+
+
+def test_no_majority_tie_parks_whole_cluster():
+    ex = PodGradientExchange(n_pods=2)
+    ex.partition({1})                           # 1 of 2 each side: no quorum
+    res = ex.round([_grad(), _grad(1)])
+    assert res.avg is None and res.fingerprint is None
+    assert res.quorum == () and res.parked == (0, 1)
+    assert ex.parked_pod_rounds == 2
+    with pytest.raises(RuntimeError, match="no quorum"):
+        ex.exchange([_grad(), _grad(1)])
+    ex.restore_pods({1})                        # heal: full cluster again
+    assert ex.current_quorum() == (0, 1)
+
+
+def test_split_brain_fingerprint_detection():
+    ex = PodGradientExchange(n_pods=3)
+    assert ex.check_round_fingerprints(0, {0: "aa", 1: "aa", 2: "aa"})
+    assert ex.split_brain_divergences == 0
+    assert not ex.check_round_fingerprints(1, {0: "aa", 1: "bb"})
+    assert ex.split_brain_divergences == 1
+
+
+# ---------------------------------------------------------------------------
+# residual hygiene on membership change
+# ---------------------------------------------------------------------------
+def test_rejoining_pod_adopts_quorum_residual_not_stale_one():
+    ex = PodGradientExchange(n_pods=3)
+    g = _grad()
+    ex.round([g, g, g])                        # all residuals now nonzero
+    stale = ex.residuals[2]
+    assert any(np.abs(np.asarray(leaf)).max() > 0
+               for leaf in jax.tree.leaves(stale))
+    ex.partition({2})
+    ex.round([g, g, None])                     # quorum residuals advance
+    ex.round([g, g, None])
+    assert tree_digest(ex.residuals[2]) == tree_digest(stale)  # frozen
+    ex.restore_pods({2})
+    # membership change: stale residual is reset, quorum's adopted
+    ex.reset_residual(2)
+    assert all(np.abs(np.asarray(leaf)).max() == 0
+               for leaf in jax.tree.leaves(ex.residuals[2]))
+    ex.set_residual(2, ex.residuals[0])
+    assert tree_digest(ex.residuals[2]) == tree_digest(ex.residuals[0])
+    assert tree_digest(ex.residuals[2]) != tree_digest(stale)
+
+
+# ---------------------------------------------------------------------------
+# minority catch-up: bit-identical to the unpartitioned run after heal
+# ---------------------------------------------------------------------------
+def test_partitioned_then_healed_matches_fault_free_run(tmp_path,
+                                                        cluster_setup):
+    cfg, params = cluster_setup
+    n_steps = 8
+    trace = FaultTrace(events=[FaultEvent(step=2, kind=NET_PARTITION,
+                                          targets=(2,), duration=3, seed=0)])
+    faulty = _make_cluster(cfg, params, tmp_path / "a",
+                           chaos=ChaosEngine(trace))
+    rep = faulty.run(n_steps)
+    clean = _make_cluster(cfg, params, tmp_path / "b")
+    ref = clean.run(n_steps)
+
+    assert rep.steps_completed == ref.steps_completed == n_steps
+    assert rep.partitions == 1 and rep.heals == 1 and rep.catchups == 1
+    assert rep.parked_pod_rounds > 0
+    assert rep.split_brain_divergences == 0
+    assert rep.index_violations == 0
+    # the acceptance property: every pod (including the healed minority
+    # pod 2) lands bit-identical to the fault-free cluster
+    ref_digest = tree_digest(clean.params[0])
+    for p in range(3):
+        assert tree_digest(faulty.params[p]) == ref_digest, f"pod {p}"
+    # healed pod adopted the quorum's residual, not its stale one
+    assert (tree_digest(faulty.exchange.residuals[2]) ==
+            tree_digest(faulty.exchange.residuals[0]))
+    np.testing.assert_allclose(rep.losses, ref.losses)
+
+
+def test_heal_after_target_step_catches_lowest_index_pod_up(tmp_path,
+                                                            cluster_setup):
+    """Regression: pod 0 is partitioned and the window outlives the run, so
+    the heal drains at loop exit.  The catch-up commit must be authored by
+    an up-to-date quorum member — never the rejoined stale pod, even when
+    it has the lowest index."""
+    cfg, params = cluster_setup
+    trace = FaultTrace(events=[FaultEvent(step=3, kind=NET_PARTITION,
+                                          targets=(0,), duration=50,
+                                          seed=0)])
+    faulty = _make_cluster(cfg, params, tmp_path / "a",
+                           chaos=ChaosEngine(trace))
+    rep = faulty.run(6)
+    clean = _make_cluster(cfg, params, tmp_path / "b")
+    clean.run(6)
+    assert rep.steps_completed == 6
+    assert rep.heals == 1 and rep.catchups == 1   # drained at loop exit
+    ref_digest = tree_digest(clean.params[0])
+    for p in range(3):
+        assert tree_digest(faulty.params[p]) == ref_digest, f"pod {p}"
+
+
+def test_whole_cluster_park_loses_rounds_not_batches(tmp_path,
+                                                     cluster_setup):
+    """Partitioning both non-lead pods of 3 leaves no majority: everyone
+    parks for the window, then training resumes on the *next* batch —
+    wall-clock rounds are lost, data order is not."""
+    cfg, params = cluster_setup
+    trace = FaultTrace(events=[FaultEvent(step=1, kind=NET_PARTITION,
+                                          targets=(1, 2), duration=2,
+                                          seed=0)])
+    cluster = _make_cluster(cfg, params, tmp_path / "a",
+                            chaos=ChaosEngine(trace))
+    rep = cluster.run(4)
+    clean = _make_cluster(cfg, params, tmp_path / "b")
+    ref = clean.run(4)
+    assert rep.steps_completed == 4
+    assert rep.rounds > ref.rounds          # parked rounds consumed wall clock
+    assert rep.split_brain_divergences == 0
+    ref_digest = tree_digest(clean.params[0])
+    assert all(tree_digest(cluster.params[p]) == ref_digest
+               for p in range(3))
