@@ -25,6 +25,11 @@ split-brain fingerprint divergences.
 Record/replay: ``--record DIR`` writes each cell's trace as JSON;
 ``--replay DIR`` re-runs from those files with **no RNG at all** — two
 replays of the same directory produce byte-identical ``--out`` grids.
+``--trace-dir DIR`` additionally runs every cell under the ``repro.obs``
+flight recorder (dump-on-fault); tracing consumes no RNG and touches no
+counters, so a traced replay's grid stays byte-identical to an untraced
+one.  ``--only layer/kind[,layer/kind...]`` restricts the grid to the
+named cells.
 
     PYTHONPATH=src python benchmarks/chaos_matrix.py --record /tmp/tr \
         --out /tmp/grid_a.json
@@ -44,6 +49,7 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import obs  # noqa: E402
 from repro.chaos import (CHAOS_PROFILES, CKPT_CORRUPT,  # noqa: E402
                          DISK_FULL, HOST_CRASH, NET_PARTITION, SERVE_KINDS,
                          SNAPSHOT_CORRUPT, TRAIN_KINDS, ChaosEngine,
@@ -110,7 +116,7 @@ def serve_workload(cfg, n: int, seed: int) -> list[Request]:
 
 
 def run_serve_cell(cfg, params, trace: FaultTrace, *, n_requests: int,
-                   max_steps: int, seed: int) -> dict:
+                   max_steps: int, seed: int, tracer=None) -> dict:
     reqs = serve_workload(cfg, n_requests, seed + 17)
     cache_len = max(prompt_bucket(r.prompt_len) + r.max_new_tokens
                     for r in reqs)
@@ -119,7 +125,7 @@ def run_serve_cell(cfg, params, trace: FaultTrace, *, n_requests: int,
         cfg, EngineConfig(cache_len=cache_len, q_chunk=64,
                           snapshot_lambda=4),
         pool=pool, policy=uniform_policy(2), params=params,
-        chaos=ChaosEngine(trace))
+        chaos=ChaosEngine(trace, tracer=tracer), tracer=tracer)
     for r in reqs:
         engine.submit(r)
     m = engine.run(max_steps=max_steps)
@@ -139,7 +145,7 @@ def run_serve_cell(cfg, params, trace: FaultTrace, *, n_requests: int,
 
 
 def run_train_cell(cfg, trace: FaultTrace, *, n_steps: int,
-                   seed: int) -> dict:
+                   seed: int, tracer=None) -> dict:
     params = lm.init_params(jax.random.key(seed), cfg)
     step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3),
                                       q_chunk=64, xent_chunk=512,
@@ -149,12 +155,12 @@ def run_train_cell(cfg, trace: FaultTrace, *, n_steps: int,
         coord = TrainingCoordinator(
             train_step=step_fn, params=params,
             opt_state=adamw_init(params), pipeline=pipeline,
-            store=CheckpointStore(ckpt_dir),
+            store=CheckpointStore(ckpt_dir, tracer=tracer),
             # tight cadence (~every 3 steps): the ckpt_corrupt cell needs a
             # predecessor checkpoint for the fallback restore to land on
             interval=DynamicInterval(gamma_s=0.5, lam_min=2.0,
                                      prior_mtbf_s=10.0),
-            chaos=ChaosEngine(trace))
+            chaos=ChaosEngine(trace, tracer=tracer), tracer=tracer)
         rep = coord.run(n_steps)
     survived = (rep.steps_completed == n_steps
                 and bool(np.all(np.isfinite(rep.losses)))
@@ -177,24 +183,24 @@ def run_train_cell(cfg, trace: FaultTrace, *, n_steps: int,
 
 
 def run_partition_cell(cfg, trace: FaultTrace, *, n_steps: int,
-                       seed: int) -> dict:
+                       seed: int, tracer=None) -> dict:
     """net_partition cell: a 3-pod :class:`PodTrainingCluster` rides the
     trace (quorum trains, minority parks, heal catches up from the quorum
     checkpoint) next to a fault-free reference cluster.  The cell survives
     only when the healed cluster's pods all land **bit-identical** to the
     reference params at equal applied-step count, with zero split-brain
     fingerprint divergences and a clean committed-index audit."""
-    def build(chaos, ckpt_dir):
+    def build(chaos, ckpt_dir, trc=None):
         return PodTrainingCluster(
             cfg=cfg, params=lm.init_params(jax.random.key(seed), cfg),
             pipeline=SyntheticTokenPipeline(DataConfig(2, 32, seed=seed),
                                             cfg),
-            store=CheckpointStore(ckpt_dir), n_pods=3, ckpt_every=4,
-            chaos=chaos)
+            store=CheckpointStore(ckpt_dir, tracer=trc), n_pods=3,
+            ckpt_every=4, chaos=chaos, tracer=trc)
 
     with tempfile.TemporaryDirectory() as da, \
             tempfile.TemporaryDirectory() as db:
-        cluster = build(ChaosEngine(trace), da)
+        cluster = build(ChaosEngine(trace, tracer=tracer), da, tracer)
         rep = cluster.run(n_steps)
         reference = build(None, db)
         ref = reference.run(n_steps)
@@ -229,10 +235,24 @@ def trace_path(d: str, layer: str, kind: str) -> str:
 def run_matrix(args) -> list[dict]:
     cfg = get_config(args.arch, tiny=True)
     serve_params = lm.init_params(jax.random.key(args.seed), cfg)
+    ctx = obs.setup(getattr(args, "trace_dir", "") or None,
+                    dump_on_fault=True)
+    tracer = ctx.tracer if ctx.enabled else None
     rows = []
-    cells = ([("serve", k) for k in SERVE_KINDS] +
-             [("train", k) for k in TRAIN_KINDS])
-    for i, (layer, kind) in enumerate(cells):
+    all_cells = ([("serve", k) for k in SERVE_KINDS] +
+                 [("train", k) for k in TRAIN_KINDS])
+    # pair each cell with its position in the FULL grid before filtering:
+    # --only must not shift the per-cell trace seeds
+    cells = list(enumerate(all_cells))
+    only = {c.strip() for c in getattr(args, "only", "").split(",")
+            if c.strip()}
+    if only:
+        unknown = only - {f"{lay}/{k}" for lay, k in all_cells}
+        if unknown:
+            raise SystemExit(f"--only: unknown cells {sorted(unknown)}")
+        cells = [(i, (lay, k)) for i, (lay, k) in cells
+                 if f"{lay}/{k}" in only]
+    for i, (layer, kind) in cells:
         horizon = args.serve_horizon if layer == "serve" else args.steps
         if args.replay:
             trace = FaultTrace.load(trace_path(args.replay, layer, kind))
@@ -248,16 +268,19 @@ def run_matrix(args) -> list[dict]:
         if layer == "serve":
             rows.append(run_serve_cell(
                 cfg, serve_params, trace, n_requests=args.requests,
-                max_steps=args.max_steps, seed=args.seed))
+                max_steps=args.max_steps, seed=args.seed, tracer=tracer))
         elif kind == NET_PARTITION:
             rows.append(run_partition_cell(cfg, trace, n_steps=args.steps,
-                                           seed=args.seed))
+                                           seed=args.seed, tracer=tracer))
         else:
             rows.append(run_train_cell(cfg, trace, n_steps=args.steps,
-                                       seed=args.seed))
+                                       seed=args.seed, tracer=tracer))
         print(f"[{rows[-1]['layer']}/{rows[-1]['fault']}] "
               f"survived={int(rows[-1]['survived'])} "
               f"events={int(rows[-1]['events'])}", file=sys.stderr)
+    if ctx.finish() is not None:
+        print(f"trace: {len(ctx.recorder.dumps)} dump(s) under "
+              f"{args.trace_dir}", file=sys.stderr)
     return rows
 
 
@@ -279,6 +302,12 @@ def main() -> None:
     ap.add_argument("--out", default="",
                     help="write the grid as JSON (deterministic: replaying "
                          "the same traces reproduces it byte-identically)")
+    ap.add_argument("--trace-dir", default="",
+                    help="run cells under the repro.obs flight recorder "
+                         "(dump-on-fault); does not perturb the grid")
+    ap.add_argument("--only", default="",
+                    help="comma-separated layer/kind cells to run "
+                         "(e.g. serve/host_crash,train/net_partition)")
     args = ap.parse_args()
 
     rows = run_matrix(args)

@@ -13,7 +13,13 @@ Per (arch x shape) cell on the single-pod mesh:
 
 Hardware (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
 
+``--profile profile.json`` joins measured step wall times (written by the
+``repro.obs`` profiling hooks under ``launch/train.py --trace-dir``)
+against the analytic terms: achieved FLOP/s, fraction of single-chip
+peak, and arithmetic intensity per profiled step fn.
+
     PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--csv out]
+    PYTHONPATH=src python -m benchmarks.roofline --profile out/profile.json
 """
 from __future__ import annotations
 
@@ -93,6 +99,48 @@ def analyze_cell(arch: str, shape_name: str, mesh: str) -> dict | None:
     return out
 
 
+def profile_rows(path: str) -> list[dict]:
+    """Join a ``repro.obs`` ``profile.json`` (measured wall times + XLA
+    cost_analysis) against the machine peaks.  Measured on whatever host
+    ran the profile, so ``peak_frac`` is indicative, not a TPU claim."""
+    rows = []
+    for p in json.load(open(path)):
+        mean = p.get("mean_s")
+        flops = p.get("flops")
+        nbytes = p.get("bytes_accessed")
+        rows.append({
+            "section": "profile",
+            "name": p["name"],
+            "compile_s": p.get("compile_s"),
+            "calls": p.get("calls", 0),
+            "mean_s": mean,
+            "flops": flops,
+            "achieved_flops_per_s": (flops / mean if flops and mean
+                                     else None),
+            "peak_frac": (flops / mean / PEAK_FLOPS if flops and mean
+                          else None),
+            "intensity_flops_per_byte": (flops / nbytes
+                                         if flops and nbytes else None),
+        })
+    return rows
+
+
+def print_profile_section(rows: list[dict]) -> None:
+    hdr = (f"{'step fn':16s} {'compile_s':>10s} {'calls':>6s} "
+           f"{'mean_s':>10s} {'GFLOP/s':>9s} {'peak%':>7s} {'F/B':>7s}")
+    print("\nmeasured profile (repro.obs):")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        def fmt(v, spec, scale=1.0):
+            return f"{v * scale:{spec}}" if v is not None else "-"
+        print(f"{r['name']:16s} {fmt(r['compile_s'], '10.3f')} "
+              f"{r['calls']:6d} {fmt(r['mean_s'], '10.4g')} "
+              f"{fmt(r['achieved_flops_per_s'], '9.3g', 1e-9)} "
+              f"{fmt(r['peak_frac'], '7.4f', 100.0)} "
+              f"{fmt(r['intensity_flops_per_byte'], '7.2f')}")
+
+
 def main() -> None:
     global DRYRUN_DIR
     ap = argparse.ArgumentParser()
@@ -103,6 +151,9 @@ def main() -> None:
     ap.add_argument("--json-out",
                     default=os.path.join(os.path.dirname(__file__), "out",
                                          "roofline.json"))
+    ap.add_argument("--profile", default="",
+                    help="profile.json from launch/train.py --trace-dir; "
+                         "appends a measured achieved-FLOP/s section")
     args = ap.parse_args()
     if args.dir:
         DRYRUN_DIR = args.dir
@@ -129,6 +180,10 @@ def main() -> None:
                   f"{r['roofline_fraction']:9.3f} "
                   f"{r['temp_gib'] + r['args_gib']:8.2f} "
                   f"{100 * r['f32_share']:5.0f}")
+    if args.profile:
+        prof = profile_rows(args.profile)
+        print_profile_section(prof)
+        rows.extend(prof)
     with open(args.json_out, "w") as f:
         json.dump(rows, f, indent=1, default=float)
     print(f"\nwrote {args.json_out}")

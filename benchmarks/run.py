@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import time
 
 from . import _harness as H
@@ -18,6 +19,7 @@ FIGS = [
     "fig08_usage", "fig09_wastage", "fig10_slr",
     "fig11_usage_types", "fig12_wastage_types",
     "tab_ri_comparison",
+    "serve_slo",
 ]
 
 
@@ -25,6 +27,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-size grid (sizes up to 700, 10 runs/DAX)")
+    ap.add_argument("--quick", action="store_true",
+                    help="single-row smoke variant for benchmarks that "
+                         "support it (serve_slo)")
     ap.add_argument("--only", nargs="*", default=None,
                     help="figure-name prefixes to run")
     args = ap.parse_args()
@@ -33,8 +38,11 @@ def main() -> None:
         if args.only and not any(name.startswith(o) for o in args.only):
             continue
         mod = importlib.import_module(f"benchmarks.{name}")
+        kwargs = {"fast": not args.full}
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kwargs["quick"] = True
         t0 = time.perf_counter()
-        rows = mod.run(fast=not args.full)
+        rows = mod.run(**kwargs)
         wall = time.perf_counter() - t0
         H.print_csv(name, rows)
         print(f"# {name}: {len(rows)} rows in {wall:.1f}s\n")

@@ -17,7 +17,13 @@ usage/wastage.  The paper's headline trade-off should reproduce online:
 CRCH wastes fewer tokens than Replicate-All while completing more requests
 within deadline than no-replication.
 
+Runs standalone or as part of the ``benchmarks.run`` sweep (full mode
+covers every ``_harness.ENVS`` environment; ``--quick`` is a single
+normal-env olmo-1b row for smoke/overhead checks):
+
     PYTHONPATH=src python benchmarks/serve_slo.py --tiny
+    PYTHONPATH=src python benchmarks/serve_slo.py --quick
+    PYTHONPATH=src python -m benchmarks.run --only serve_slo --quick
 """
 from __future__ import annotations
 
@@ -26,6 +32,11 @@ import sys
 import time
 
 sys.path.insert(0, "src")
+
+try:
+    from . import _harness as H
+except ImportError:  # standalone: python benchmarks/serve_slo.py
+    import _harness as H
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
@@ -102,11 +113,21 @@ def run_cell(cfg, params, workload, *, policy_name: str, env: str,
     return row
 
 
-def run(fast: bool = True, *, envs=("normal", "unstable"), seed: int = 0,
-        arch: str = "olmo-1b") -> list[dict]:
+def run(fast: bool = True, *, envs=None, seed: int = 0,
+        arch: str = "olmo-1b", quick: bool = False) -> list[dict]:
+    if envs is None:
+        # full mode sweeps every harness environment (paper Figs. 8-12);
+        # fast keeps the two that exercise failures; quick is one row-set
+        envs = (("normal",) if quick
+                else ("normal", "unstable") if fast else H.ENVS)
     cfg = get_config(arch, tiny=fast)
     params = lm.init_params(jax.random.key(seed), cfg)
-    if fast:
+    if quick:
+        workload_kw = dict(n_short=10, n_medium=4, n_long=2,
+                           arrival_spread=60, slack_factor=4.0)
+        pool_kw = dict(n_workers=3, slots_per_worker=2, max_rep=2,
+                       max_steps=1_000)
+    elif fast:
         workload_kw = dict(n_short=20, n_medium=8, n_long=4,
                            arrival_spread=120, slack_factor=4.0)
         pool_kw = dict(n_workers=4, slots_per_worker=2, max_rep=3,
@@ -124,7 +145,7 @@ def run(fast: bool = True, *, envs=("normal", "unstable"), seed: int = 0,
                                  [r for r in workload],  # fresh list
                                  policy_name=pol, env=env, seed=seed,
                                  **pool_kw))
-    return rows
+    return H.emit("serve_slo", rows)
 
 
 def check_tradeoff(rows: list[dict]) -> list[str]:
@@ -165,6 +186,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tiny", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="single normal-env olmo-1b row (smoke / recorder "
+                         "overhead checks)")
     ap.add_argument("--arch", nargs="+", default=["olmo-1b", "rwkv6-3b"],
                     help="architectures to sweep (one engine run per arch)")
     ap.add_argument("--envs", nargs="+",
@@ -173,10 +197,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     fast = not args.full
-    rows = []
-    for arch in args.arch:
-        rows.extend(run(fast, envs=tuple(args.envs), seed=args.seed,
-                        arch=arch))
+    if args.quick:
+        rows = run(True, seed=args.seed, arch=args.arch[0], quick=True)
+    else:
+        rows = []
+        for arch in args.arch:
+            rows.extend(run(fast, envs=tuple(args.envs), seed=args.seed,
+                            arch=arch))
     cols = [("arch", "arch"), ("env", "env"), ("policy", "policy"),
             ("n_requests", "reqs"), ("completed", "done"),
             ("in_deadline", "slo"), ("goodput", "goodput/1k"),
@@ -186,6 +213,8 @@ def main() -> None:
             ("resubmissions", "resub"), ("restores", "restore"),
             ("steps", "steps"), ("wall_s", "wall_s")]
     print(format_table(rows, cols))
+    if args.quick:
+        return  # smoke row: too small for the paper acceptance check
     print()
     for m in check_tradeoff(rows):
         print(m)

@@ -73,6 +73,8 @@ import os
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 __all__ = [
     "HOST_CRASH",
     "SLOWDOWN",
@@ -254,10 +256,15 @@ class ChaosEngine:
     The consumer (``TrainingCoordinator`` / ``ServeEngine``) calls
     :meth:`events_at` once per step; each event fires exactly once, in trace
     order, so two runs over the same trace see identical fault sequences.
+
+    A ``tracer`` (``repro.obs``) annotates every injected fault as a
+    ``fault.<kind>`` span event and arms the flight recorder's
+    dump-on-fault trigger; the default NULL tracer makes this one branch.
     """
 
-    def __init__(self, trace: FaultTrace):
+    def __init__(self, trace: FaultTrace, *, tracer=None):
         self.trace = trace
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._by_step: dict[int, list[FaultEvent]] = {}
         for ev in trace.events:
             self._by_step.setdefault(ev.step, []).append(ev)
@@ -269,6 +276,9 @@ class ChaosEngine:
         self.applied.extend(evs)
         for ev in evs:
             self.applied_by_kind[ev.kind] += 1
+            self.tracer.fault(ev.kind, step=step,
+                              targets=list(ev.targets),
+                              duration=ev.duration)
         return evs
 
     def pending(self) -> int:

@@ -59,6 +59,8 @@ import threading
 import jax
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 __all__ = ["CheckpointStore"]
 
 log = logging.getLogger(__name__)
@@ -77,10 +79,12 @@ def _leaf_paths(tree):
 class CheckpointStore:
     """File-backed pointer checkpoint store with fallback restore."""
 
-    def __init__(self, root: str, *, n_hosts: int = 1, keep: int = 3):
+    def __init__(self, root: str, *, n_hosts: int = 1, keep: int = 3,
+                 tracer=None):
         self.root = root
         self.n_hosts = n_hosts
         self.keep = max(1, int(keep))
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         os.makedirs(root, exist_ok=True)
         self._async_thread: threading.Thread | None = None
         self._async_exc: BaseException | None = None
@@ -165,6 +169,7 @@ class CheckpointStore:
             pass
         self._drop_step_files(victim)
         self.pruned_for_space.append(victim)
+        self.tracer.event("ckpt.prune", step=victim, reason="disk_full")
         log.warning("checkpoint step %d pruned to free disk space", victim)
         return True
 
@@ -220,15 +225,24 @@ class CheckpointStore:
                     if not self._prune_oldest_for_space(step):
                         raise
                     self.enospc_retries += 1
+                    self.tracer.event("ckpt.enospc_retry", step=step)
                     log.warning("checkpoint save step %d hit ENOSPC; "
                                 "pruned oldest commit and retrying", step)
 
         if sync:
-            return _write()
+            with self.tracer.span("ckpt.save", track="ckpt-io", step=step,
+                                  mode="sync"):
+                return _write()
 
         def _runner() -> None:
+            t0 = self.tracer.clock()
             try:
                 _write()
+                # complete() is thread-safe (bypasses the span stack), so
+                # the writer thread can report its own wall time
+                self.tracer.complete("ckpt.save", t0, self.tracer.clock(),
+                                     track="ckpt-io", step=step,
+                                     mode="async")
             except BaseException as e:   # surfaced from wait(), not lost
                 self._async_exc = e
 
@@ -259,6 +273,7 @@ class CheckpointStore:
         rec = {"step": step, "path": path, "quarantined_to": dest,
                "reason": reason}
         self.quarantined.append(rec)
+        self.tracer.event("ckpt.quarantine", step=step, reason=reason)
         with open(os.path.join(qdir, "LOG.jsonl"), "a") as f:
             f.write(json.dumps(rec) + "\n")
         log.warning("checkpoint shard quarantined: %s (%s)", path, reason)
@@ -299,26 +314,34 @@ class CheckpointStore:
                 f"no committed checkpoint index under {self.root}")
         self.last_restore_fallbacks = 0
         errors: list[str] = []
-        for step in reversed(steps):
-            try:
-                out, index = self._read_verified(step, leaves, verify)
-            except Exception as e:   # corrupt/missing shard: fall back
-                errors.append(f"step {step}: {e}")
-                self.last_restore_fallbacks += 1
-                # retire the failed index so later restores skip it
+        with self.tracer.span("ckpt.restore", track="ckpt-io",
+                              newest=steps[-1]) as sp:
+            for step in reversed(steps):
                 try:
-                    os.replace(self._index_path(step), os.path.join(
-                        self._quarantine_dir(), f"index_{step:09d}.json"))
-                except OSError:
-                    pass
-                log.warning("checkpoint step %d failed verification (%s); "
-                            "falling back", step, e)
-                continue
-            if errors:
-                log.warning("restore fell back to step %d after %d bad "
-                            "checkpoint(s)", step, len(errors))
-            tree = jax.tree_util.tree_unflatten(treedef, out)
-            return tree, index["step"], index["extra"]
+                    out, index = self._read_verified(step, leaves, verify)
+                except Exception as e:   # corrupt/missing shard: fall back
+                    errors.append(f"step {step}: {e}")
+                    self.last_restore_fallbacks += 1
+                    self.tracer.event("ckpt.fallback", step=step,
+                                      reason=str(e)[:120])
+                    # retire the failed index so later restores skip it
+                    try:
+                        os.replace(self._index_path(step), os.path.join(
+                            self._quarantine_dir(), f"index_{step:09d}.json"))
+                    except OSError:
+                        pass
+                    log.warning("checkpoint step %d failed verification "
+                                "(%s); falling back", step, e)
+                    continue
+                if errors:
+                    log.warning("restore fell back to step %d after %d bad "
+                                "checkpoint(s)", step, len(errors))
+                    self.tracer.recovery("ckpt_corrupt", restored_step=step,
+                                         fallbacks=len(errors))
+                sp.set(restored_step=step,
+                       fallbacks=self.last_restore_fallbacks)
+                tree = jax.tree_util.tree_unflatten(treedef, out)
+                return tree, index["step"], index["extra"]
         raise IOError(
             f"no committed checkpoint passed verification under {self.root} "
             f"(bad shards quarantined to {self._quarantine_dir()}): "

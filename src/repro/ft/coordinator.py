@@ -49,6 +49,8 @@ import numpy as np
 from repro.chaos.faults import (CAPACITY_LOSS, CKPT_CORRUPT, DISK_FULL,
                                 HOST_CRASH, NAN_POISON, NET_PARTITION,
                                 SLOWDOWN, corrupt_checkpoint_shard)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 from .checkpoint import CheckpointStore
 from .interval import DynamicInterval
@@ -142,7 +144,8 @@ class TrainingCoordinator:
                  interval: DynamicInterval | None = None,
                  step_time_s: float = 1.0,
                  injector: FaultInjector | None = None,
-                 chaos=None):
+                 chaos=None, tracer=None,
+                 registry: MetricsRegistry | None = None):
         self.train_step = train_step
         self.params = params
         self.opt_state = opt_state
@@ -152,6 +155,22 @@ class TrainingCoordinator:
         self.step_time_s = step_time_s
         self.injector = injector
         self.chaos = chaos   # repro.chaos.ChaosEngine | None
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry if registry is not None else MetricsRegistry()
+        # the coordinator's former inline counters, as labeled series; the
+        # report reads these back, so a shared registry sees the same numbers
+        self._ev = self.registry.counter(
+            "train_events_total",
+            "training-side fault/recovery events by kind", ("kind",))
+        self._ckpt_count = self.registry.counter(
+            "train_checkpoints_total", "checkpoints committed by mode",
+            ("mode",))
+        self._wasted = self.registry.counter(
+            "train_wasted_steps_total",
+            "steps replayed because they were past the last checkpoint")
+        self._lost = self.registry.counter(
+            "train_lost_steps_total",
+            "virtual steps lost without state loss, by cause", ("cause",))
         self.step = 0
         self._last_ckpt_step = -1
         self._nan_skip: set[int] = set()         # quarantined batch indices
@@ -168,6 +187,7 @@ class TrainingCoordinator:
         self.store.save(self.step, tree, extra=self.pipeline.state(),
                         sync=sync)
         self._last_ckpt_step = self.step
+        self._ckpt_count.inc(mode="sync" if sync else "async")
 
     def _restore(self) -> None:
         tree, step, extra = self.store.restore(
@@ -182,13 +202,9 @@ class TrainingCoordinator:
 
     # -- main loop --------------------------------------------------------------
     def run(self, n_steps: int) -> CoordinatorReport:
-        failures = restores = wasted = ckpts = 0
-        nan_rollbacks = skipped = slowdowns = corruptions = fallbacks = 0
-        partitions = disk_full_events = 0
-        backoff_steps = parked = 0.0
+        ev, lost = self._ev, self._lost
         losses: list[float] = []
         self._save(sync=True)
-        ckpts += 1
         virtual_t = 0.0
         while self.step < n_steps:
             step = self.step
@@ -196,59 +212,73 @@ class TrainingCoordinator:
                 # a previous visit to this step failed repeatedly: checkpoint
                 # right before the retry so a re-strike replays nothing
                 self._save(sync=True)
-                ckpts += 1
             # -- faults scheduled for this step ------------------------------
             crash = False
             poison = False
             repair = float(self.injector.mttr_steps
                            if self.injector is not None else 2.0)
             if self.chaos is not None:
-                for ev in self.chaos.events_at(step):
-                    if ev.kind in (HOST_CRASH, CAPACITY_LOSS):
+                for ev_ in self.chaos.events_at(step):
+                    if ev_.kind in (HOST_CRASH, CAPACITY_LOSS):
                         crash = True
-                        repair = max(repair, float(ev.duration))
-                    elif ev.kind == SLOWDOWN:
-                        slowdowns += 1
-                        virtual_t += ev.duration * self.step_time_s
-                    elif ev.kind == CKPT_CORRUPT:
-                        if corrupt_checkpoint_shard(self.store, ev.seed):
-                            corruptions += 1
-                    elif ev.kind == NAN_POISON:
+                        repair = max(repair, float(ev_.duration))
+                    elif ev_.kind == SLOWDOWN:
+                        ev.inc(kind="slowdown")
+                        lost.inc(ev_.duration, cause="slowdown")
+                        virtual_t += ev_.duration * self.step_time_s
+                    elif ev_.kind == CKPT_CORRUPT:
+                        if corrupt_checkpoint_shard(self.store, ev_.seed):
+                            ev.inc(kind="ckpt_corrupt")
+                    elif ev_.kind == NAN_POISON:
                         poison = True
-                    elif ev.kind == NET_PARTITION:
+                    elif ev_.kind == NET_PARTITION:
                         # degenerate single-pod cluster: no quorum on the
                         # other side of the cut -> whole-cluster park for
                         # the window (wall clock lost, no state lost)
-                        partitions += 1
-                        parked += ev.duration
-                        virtual_t += ev.duration * self.step_time_s
-                    elif ev.kind == DISK_FULL:
+                        ev.inc(kind="net_partition")
+                        lost.inc(ev_.duration, cause="partition_park")
+                        virtual_t += ev_.duration * self.step_time_s
+                        self.tracer.recovery("net_partition", step=step,
+                                             parked=ev_.duration)
+                    elif ev_.kind == DISK_FULL:
                         # arm the next save with a mid-write ENOSPC and
                         # push a checkpoint through it immediately: the
                         # store must prune-and-retry, never corrupt the
                         # committed index
                         self.store.inject_disk_full()
-                        disk_full_events += 1
+                        ev.inc(kind="disk_full")
+                        retries_before = self.store.enospc_retries
                         self._save(sync=False)
-                        ckpts += 1
+                        self.store.wait()
+                        self.tracer.recovery(
+                            "disk_full", step=step,
+                            retries=self.store.enospc_retries
+                            - retries_before)
             if self.injector is not None and self.injector.consume(step):
                 crash = True
             if crash:
                 # host failure mid-step: lose work since last checkpoint
-                failures += 1
-                wasted += step - self._last_ckpt_step
+                ev.inc(kind="failure")
+                self._wasted.inc(step - self._last_ckpt_step)
                 self._fail_counts[step] += 1
                 streak = self._fail_counts[step]
                 backoff = repair * (2 ** (streak - 1))   # escalate on repeat
-                backoff_steps += backoff - repair
+                if backoff > repair:
+                    lost.inc(backoff - repair, cause="backoff")
+                    self.tracer.event("coord.backoff", step=step,
+                                      streak=streak, wait=backoff)
                 if streak >= 2:
                     self._ckpt_before.add(step)
                 self.interval.record_failure(virtual_t)
                 self.interval.record_repair(backoff * self.step_time_s)
                 virtual_t += backoff * self.step_time_s
                 self._restore()
-                fallbacks += self.store.last_restore_fallbacks
-                restores += 1
+                ev.inc(self.store.last_restore_fallbacks,
+                       kind="ckpt_fallback")
+                ev.inc(kind="restore")
+                self.tracer.recovery(
+                    "host_crash", step=step, restored_step=self.step,
+                    wasted=step - self._last_ckpt_step)
                 continue
             # -- one train step (skipping quarantined batches) ---------------
             while self.pipeline.next_index in self._nan_skip:
@@ -265,9 +295,10 @@ class TrainingCoordinator:
                 # NaN/Inf guard: reject the update (params/opt keep their
                 # pre-step values) and quarantine the batch so checkpoint
                 # replay skips it too
-                nan_rollbacks += 1
-                skipped += 1
+                ev.inc(kind="nan_rollback")
+                ev.inc(kind="batch_quarantined")
                 self._nan_skip.add(bidx)
+                self.tracer.recovery("nan_poison", step=step, batch=bidx)
                 continue
             self.params, self.opt_state = params, opt_state
             losses.append(loss)
@@ -275,16 +306,22 @@ class TrainingCoordinator:
             virtual_t += self.step_time_s
             if self.step - self._last_ckpt_step >= self._ckpt_every():
                 self._save(sync=False)   # async: only the pointer flip syncs
-                ckpts += 1
         self.store.wait()
         return CoordinatorReport(
-            steps_completed=self.step, failures=failures, restores=restores,
-            wasted_steps=wasted, checkpoints=ckpts,
+            steps_completed=self.step,
+            failures=int(ev.value(kind="failure")),
+            restores=int(ev.value(kind="restore")),
+            wasted_steps=int(self._wasted.total()),
+            checkpoints=int(self._ckpt_count.total()),
             final_loss=losses[-1] if losses else float("nan"), losses=losses,
-            nan_rollbacks=nan_rollbacks, skipped_batches=skipped,
-            backoff_steps=float(backoff_steps), ckpt_fallbacks=fallbacks,
-            ckpt_corruptions=corruptions, slowdowns=slowdowns,
-            partitions=partitions, parked_steps=float(parked),
-            disk_full_events=disk_full_events,
+            nan_rollbacks=int(ev.value(kind="nan_rollback")),
+            skipped_batches=int(ev.value(kind="batch_quarantined")),
+            backoff_steps=float(lost.value(cause="backoff")),
+            ckpt_fallbacks=int(ev.value(kind="ckpt_fallback")),
+            ckpt_corruptions=int(ev.value(kind="ckpt_corrupt")),
+            slowdowns=int(ev.value(kind="slowdown")),
+            partitions=int(ev.value(kind="net_partition")),
+            parked_steps=float(lost.value(cause="partition_park")),
+            disk_full_events=int(ev.value(kind="disk_full")),
             enospc_retries=self.store.enospc_retries,
             index_violations=len(self.store.verify_committed()))

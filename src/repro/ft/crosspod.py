@@ -47,6 +47,8 @@ import numpy as np
 
 from repro.chaos.faults import DISK_FULL, NET_PARTITION
 from repro.models import lm
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.grad_compression import (compress_tree_with_feedback,
                                           decompress_tree)
@@ -173,11 +175,17 @@ class PodGradientExchange:
             np.array_equal(np.asarray(x), np.asarray(y))
             for x, y in zip(la, lb))
 
-    def round(self, pod_grads: list) -> ExchangeResult:
+    def round(self, pod_grads: list, *,
+              with_fingerprint: bool = True) -> ExchangeResult:
         """One exchange round.  ``pod_grads[p]`` is pod ``p``'s gradient
         pytree (entries for parked pods may be ``None`` — they are never
         read).  Quorum pods compress-with-feedback, allgather, and average;
-        everyone else parks."""
+        everyone else parks.
+
+        ``with_fingerprint=False`` skips the sha1 digest of the averaged
+        update — ``tree_digest`` forces a device->host sync of every leaf,
+        so sampled rounds (``PodTrainingCluster.fingerprint_every``) leave
+        the result's ``fingerprint`` as ``None``."""
         assert len(pod_grads) == self.n_pods
         quorum = self.current_quorum()
         self.round_no += 1
@@ -206,8 +214,9 @@ class PodGradientExchange:
         else:
             trees = [decompress_tree(q, s) for q, s in payloads]
             avg = jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
-        return ExchangeResult(avg=avg, quorum=quorum, parked=parked,
-                              fingerprint=tree_digest(avg))
+        return ExchangeResult(
+            avg=avg, quorum=quorum, parked=parked,
+            fingerprint=tree_digest(avg) if with_fingerprint else None)
 
     def exchange(self, pod_grads: list):
         """Fully-connected compatibility wrapper: returns the averaged
@@ -253,6 +262,8 @@ class ClusterReport:
     index_violations: int
     final_loss: float
     losses: list
+    fingerprints_taken: int = 0
+    fingerprints_skipped: int = 0
 
 
 class PodTrainingCluster:
@@ -281,13 +292,25 @@ class PodTrainingCluster:
     def __init__(self, *, cfg, params, pipeline, store: CheckpointStore,
                  n_pods: int = 3, opt_cfg: AdamWConfig | None = None,
                  q_chunk: int = 16, xent_chunk: int = 16,
-                 ckpt_every: int = 4, chaos=None):
+                 ckpt_every: int = 4, chaos=None,
+                 fingerprint_every: int = 1, tracer=None,
+                 registry: MetricsRegistry | None = None):
         self.cfg = cfg
         self.n_pods = n_pods
         self.pipeline = pipeline
         self.store = store
         self.chaos = chaos   # repro.chaos.ChaosEngine | None
         self.ckpt_every = max(1, int(ckpt_every))
+        # split-brain fingerprints sample every N applied steps; 1 = every
+        # step (the --chaos-assert setting).  tree_digest syncs every param
+        # leaf to host, so sampling is the steady-state default upstream.
+        self.fingerprint_every = max(1, int(fingerprint_every))
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._fp = self.registry.counter(
+            "crosspod_fingerprints_total",
+            "split-brain fingerprint rounds by status (taken vs sampled "
+            "away)", ("status",))
         opt_cfg = opt_cfg or AdamWConfig(lr=1e-3)
 
         def loss_fn(p, batch):
@@ -322,33 +345,42 @@ class PodTrainingCluster:
             return False
         lead = max(quorum, key=lambda p: (self.pod_step[p], -p))
         step = self.pod_step[lead]
-        self.store.save(step, {
-            "params": self.params[lead], "opt": self.opt[lead],
-            "residual": self.exchange.residuals[lead],
-        }, extra={"applied": step}, sync=True)
+        with self.tracer.span("crosspod.commit", step=step, lead=lead):
+            self.store.save(step, {
+                "params": self.params[lead], "opt": self.opt[lead],
+                "residual": self.exchange.residuals[lead],
+            }, extra={"applied": step}, sync=True)
         self._counters["checkpoints"] += 1
         return True
 
     def _heal(self, stale: list[int]) -> None:
-        self.exchange.restore_pods(stale)
-        self._counters["heals"] += 1
-        behind = [p for p in stale if self.pod_step[p] < self.applied]
-        if not behind or self.exchange.current_quorum() is None:
-            return
-        # quorum syncs a checkpoint of its *current* state, then each stale
-        # pod restores it via the fallback-capable CheckpointStore path
-        self._commit()
-        for p in behind:
-            like = {"params": self.params[p], "opt": self.opt[p],
-                    "residual": self.exchange.residuals[p]}
-            tree, _, extra = self.store.restore(like)
-            self.params[p], self.opt[p] = tree["params"], tree["opt"]
-            # stale residual reset + quorum residual adopted: no
-            # compression-bias carryover across the partition
-            self.exchange.reset_residual(p)
-            self.exchange.set_residual(p, tree["residual"])
-            self.pod_step[p] = int(extra["applied"])
-            self._counters["catchups"] += 1
+        with self.tracer.span("crosspod.heal", pods=stale,
+                              round=self.round_no) as sp:
+            self.exchange.restore_pods(stale)
+            self._counters["heals"] += 1
+            behind = [p for p in stale if self.pod_step[p] < self.applied]
+            sp.set(behind=behind)
+            if not behind or self.exchange.current_quorum() is None:
+                return
+            # quorum syncs a checkpoint of its *current* state, then each
+            # stale pod restores it via the fallback-capable CheckpointStore
+            # path
+            self._commit()
+            for p in behind:
+                like = {"params": self.params[p], "opt": self.opt[p],
+                        "residual": self.exchange.residuals[p]}
+                tree, _, extra = self.store.restore(like)
+                self.params[p], self.opt[p] = tree["params"], tree["opt"]
+                # stale residual reset + quorum residual adopted: no
+                # compression-bias carryover across the partition
+                self.exchange.reset_residual(p)
+                self.exchange.set_residual(p, tree["residual"])
+                self.pod_step[p] = int(extra["applied"])
+                self._counters["catchups"] += 1
+                self.tracer.event("crosspod.catchup", pod=p,
+                                  to_step=self.pod_step[p])
+            self.tracer.recovery("net_partition", pods=stale,
+                                 caught_up=len(behind))
 
     # -- chaos ----------------------------------------------------------------
     def _apply_chaos(self, rnd: int) -> None:
@@ -358,12 +390,18 @@ class PodTrainingCluster:
                 self._counters["partitions"] += 1
                 heal = rnd + max(1, ev.duration)
                 self._heal_at.setdefault(heal, set()).update(minority)
+                self.tracer.event("crosspod.partition", round=rnd,
+                                  minority=list(minority), heal_round=heal)
             elif ev.kind == DISK_FULL:
                 self.store.inject_disk_full()
                 self._counters["disk_full_events"] += 1
                 # strike now: force a commit through the armed store (the
                 # ENOSPC prune-and-retry path runs under the quorum's feet)
+                retries_before = self.store.enospc_retries
                 self._commit()
+                self.tracer.recovery(
+                    "disk_full", round=rnd,
+                    retries=self.store.enospc_retries - retries_before)
             # every other kind is owned by the coordinator / serve layers
 
     # -- main loop ------------------------------------------------------------
@@ -388,18 +426,27 @@ class PodTrainingCluster:
                     grads[p] = g
                     if loss is None:
                         loss = float(loss_p)
-            res = self.exchange.round(grads)
+            # sampled split-brain detection: tree_digest forces a device->
+            # host sync per pod, so steady-state runs take it every N
+            # applied steps (N=1 under --chaos-assert = the exact check)
+            take_fp = self.applied % self.fingerprint_every == 0
+            res = self.exchange.round(grads, with_fingerprint=take_fp)
             self.round_no += 1
             if res.avg is None:
+                self.tracer.event("crosspod.park", round=rnd)
                 continue   # whole-cluster park: wall clock lost, no batch
             for p in res.quorum:
                 self.params[p], self.opt[p], _ = self._apply(
                     self.params[p], res.avg, self.opt[p])
                 self.pod_step[p] = self.applied + 1
             losses.append(loss)
-            self.exchange.check_round_fingerprints(
-                self.applied, {p: tree_digest(self.params[p])
-                               for p in res.quorum})
+            if take_fp:
+                self._fp.inc(status="taken")
+                self.exchange.check_round_fingerprints(
+                    self.applied, {p: tree_digest(self.params[p])
+                                   for p in res.quorum})
+            else:
+                self._fp.inc(status="skipped")
             self.applied += 1
             if self.applied % self.ckpt_every == 0:
                 self._commit()
@@ -421,4 +468,6 @@ class PodTrainingCluster:
             enospc_retries=self.store.enospc_retries,
             index_violations=len(self.store.verify_committed()),
             final_loss=losses[-1] if losses else float("nan"),
-            losses=losses)
+            losses=losses,
+            fingerprints_taken=int(self._fp.value(status="taken")),
+            fingerprints_skipped=int(self._fp.value(status="skipped")))

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.chaos import SERVE_KINDS, ChaosEngine, FaultTrace, sample_trace
 from repro.configs import get_config
 from repro.distributed import params as pshard
@@ -34,17 +35,19 @@ from repro.distributed.steps import make_prefill_step, make_serve_step
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.shapes import make_batch
 from repro.models import lm
-from repro.serve import (EngineConfig, Request, ServeEngine, WorkerPool,
-                         crch_policy, engine_supported, greedy_reference,
-                         prompt_bucket, uniform_policy)
+from repro.serve import (EngineConfig, Request, ServeEngine, ServeMetrics,
+                         WorkerPool, crch_policy, engine_supported,
+                         greedy_reference, prompt_bucket, uniform_policy)
 
 
-def make_chaos(args, *, kinds, n_targets: int, horizon: int):
+def make_chaos(args, *, kinds, n_targets: int, horizon: int, tracer=None):
     """Build a ChaosEngine from the --chaos* flags (None when disabled).
 
     ``--chaos-trace`` replays a recorded trace verbatim (bit-identical run);
     otherwise ``--chaos PROFILE`` samples a fresh trace from the profile's
     Section 4.1 distributions, optionally recorded with ``--chaos-record``.
+    An obs tracer annotates every applied fault (``fault.<kind>``) and arms
+    the flight recorder's dump-on-fault trigger.
     """
     if args.chaos_trace:
         trace = FaultTrace.load(args.chaos_trace)
@@ -58,7 +61,30 @@ def make_chaos(args, *, kinds, n_targets: int, horizon: int):
         trace.save(args.chaos_record)
     print(f"chaos: {len(trace)} events over {sorted(trace.kinds())} "
           f"(meta={trace.meta})")
-    return ChaosEngine(trace)
+    return ChaosEngine(trace, tracer=tracer)
+
+
+def add_trace_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--trace-dir", default="",
+                    help="enable the repro.obs flight recorder; JSONL + "
+                         "Chrome trace dumps and metrics land here")
+    ap.add_argument("--trace-dump-on-fault", action="store_true",
+                    help="dump the recorder window on every fault injected "
+                         "and every recovery path taken")
+    ap.add_argument("--trace-capacity", type=int, default=8192,
+                    help="flight-recorder ring capacity (events)")
+    ap.add_argument("--trace-window-s", type=float, default=0.0,
+                    help="dump only the last N seconds of the ring "
+                         "(0 = the whole ring)")
+
+
+def make_obs(args) -> obs.ObsContext:
+    """Build the run's ObsContext from the --trace* flags.  Without
+    ``--trace-dir`` this is the NULL tracer + a detached registry."""
+    return obs.setup(args.trace_dir or None,
+                     dump_on_fault=args.trace_dump_on_fault,
+                     capacity=args.trace_capacity,
+                     window_s=args.trace_window_s or None)
 
 
 def add_chaos_args(ap: argparse.ArgumentParser) -> None:
@@ -124,14 +150,17 @@ def continuous_main(cfg, mesh, args) -> None:
                       seed=args.seed)
     horizon = args.chaos_horizon or min(
         args.max_steps, 8 * max(r.max_new_tokens for r in reqs))
+    ctx = make_obs(args)
     chaos = make_chaos(args, kinds=SERVE_KINDS, n_targets=args.workers,
-                       horizon=horizon)
+                       horizon=horizon, tracer=ctx.tracer)
     with use_rules(mesh):
         params = _sharded_params(cfg, mesh, args.seed)
         engine = ServeEngine(
             cfg, EngineConfig(cache_len=cache_len, q_chunk=64,
                               max_queue_depth=args.max_queue_depth or None),
-            pool=pool, policy=policy, params=params, chaos=chaos)
+            pool=pool, policy=policy, params=params,
+            metrics=ServeMetrics(registry=ctx.registry), chaos=chaos,
+            tracer=ctx.tracer)
         for r in reqs:
             engine.submit(r)
         t0 = time.time()
@@ -162,6 +191,12 @@ def continuous_main(cfg, mesh, args) -> None:
     done = sorted(engine.completed)
     assert done, "no requests completed"
     print("sample:", engine.completed[done[0]][:12])
+    if ctx.finish() is not None:
+        rec = ctx.recorder
+        print(f"trace: {len(rec.dumps)} dump(s) + metrics under "
+              f"{args.trace_dir} (faults seen "
+              f"{dict(rec.faults_seen)}, recoveries "
+              f"{dict(rec.recoveries_seen)})")
     if args.chaos_assert:
         assert chaos is not None, "--chaos-assert needs an active chaos run"
         assert chaos.applied, "chaos trace fired no events"
@@ -257,6 +292,7 @@ def main() -> None:
                     default="debug")
     ap.add_argument("--seed", type=int, default=0)
     add_chaos_args(ap)
+    add_trace_args(ap)
     args = ap.parse_args()
     if args.static and (args.chaos != "none" or args.chaos_trace):
         raise SystemExit("--static has no fault tolerance to chaos-test; "

@@ -36,30 +36,41 @@ from repro.distributed.steps import make_train_step
 from repro.ft import (CheckpointStore, DynamicInterval, FaultInjector,
                       PodTrainingCluster, TrainingCoordinator, tree_digest)
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.launch.serve import add_chaos_args, make_chaos
+from repro.launch.serve import (add_chaos_args, add_trace_args, make_chaos,
+                                make_obs)
 from repro.models import lm
+from repro.obs import profile_jit, save_profiles
 from repro.optim import AdamWConfig, adamw_init
 
 
 def cluster_main(cfg, mesh, args) -> None:
     """Multi-pod mode: quorum trains through partitions, minority pods park
     and catch up from the quorum checkpoint at heal."""
-    def build(chaos_engine, ckpt_dir):
+    # --chaos-assert needs the exact per-step split-brain check; otherwise
+    # fingerprints are sampled (tree_digest syncs every leaf to host)
+    fingerprint_every = 1 if args.chaos_assert else args.fingerprint_every
+
+    def build(chaos_engine, ckpt_dir, ctx=None):
         params = lm.init_params(jax.random.key(args.seed), cfg)
         pipeline = SyntheticTokenPipeline(
             DataConfig(args.global_batch, args.seq_len, seed=args.seed), cfg)
+        tracer = ctx.tracer if ctx is not None else None
         return PodTrainingCluster(
             cfg=cfg, params=params, pipeline=pipeline,
-            store=CheckpointStore(ckpt_dir), n_pods=args.pods,
-            opt_cfg=AdamWConfig(lr=args.lr),
+            store=CheckpointStore(ckpt_dir, tracer=tracer),
+            n_pods=args.pods, opt_cfg=AdamWConfig(lr=args.lr),
             q_chunk=min(1024, args.seq_len), xent_chunk=512,
-            chaos=chaos_engine)
+            chaos=chaos_engine, fingerprint_every=fingerprint_every,
+            tracer=tracer,
+            registry=ctx.registry if ctx is not None else None)
 
+    ctx = make_obs(args)
     chaos = make_chaos(args, kinds=(NET_PARTITION, DISK_FULL),
                        n_targets=args.pods,
-                       horizon=args.chaos_horizon or args.steps)
+                       horizon=args.chaos_horizon or args.steps,
+                       tracer=ctx.tracer)
     with use_rules(mesh):
-        cluster = build(chaos, args.ckpt_dir)
+        cluster = build(chaos, args.ckpt_dir, ctx)
         t0 = time.time()
         report = cluster.run(args.steps)
         dt = time.time() - t0
@@ -72,9 +83,15 @@ def cluster_main(cfg, mesh, args) -> None:
           f"{report.catchups} disk-full {report.disk_full_events} "
           f"enospc-retries {report.enospc_retries} | split-brain "
           f"{report.split_brain_divergences} index-violations "
-          f"{report.index_violations}")
+          f"{report.index_violations} | fingerprints "
+          f"{report.fingerprints_taken} taken / "
+          f"{report.fingerprints_skipped} skipped (every "
+          f"{fingerprint_every})")
     if chaos is not None:
         print(f"chaos applied: {dict(chaos.applied_by_kind)}")
+    if ctx.finish() is not None:
+        print(f"trace: {len(ctx.recorder.dumps)} dump(s) + metrics under "
+              f"{args.trace_dir}")
     print(f"final loss {report.final_loss:.4f} wall={dt:.1f}s "
           f"({dt / max(report.steps_completed, 1):.2f}s/step)")
     if args.chaos_assert:
@@ -122,8 +139,13 @@ def main() -> None:
     ap.add_argument("--pods", type=int, default=1,
                     help="N > 1: multi-pod cluster mode through the "
                          "partition-tolerant exchange")
+    ap.add_argument("--fingerprint-every", type=int, default=8,
+                    help="cluster mode: take the split-brain sha1 "
+                         "fingerprint every N applied steps (forced to 1 "
+                         "under --chaos-assert)")
     ap.add_argument("--seed", type=int, default=0)
     add_chaos_args(ap)
+    add_trace_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -133,6 +155,7 @@ def main() -> None:
         cluster_main(cfg, mesh, args)
         return
 
+    ctx = make_obs(args)
     with use_rules(mesh):
         params = lm.init_params(jax.random.key(args.seed), cfg)
         opt_state = adamw_init(params)
@@ -143,6 +166,13 @@ def main() -> None:
             cfg, AdamWConfig(lr=args.lr), accum_steps=args.accum,
             q_chunk=min(1024, args.seq_len), xent_chunk=512,
             total_steps=args.steps))
+        profiled = None
+        if ctx.enabled:
+            # the wrapper blocks on outputs each call (exact wall times at
+            # the cost of dispatch overlap) — opt-in with --trace-dir
+            profiled = profile_jit(step_fn, name="train_step",
+                                   registry=ctx.registry, tracer=ctx.tracer)
+            step_fn = profiled
 
         pipeline = SyntheticTokenPipeline(
             DataConfig(args.global_batch, args.seq_len, seed=args.seed), cfg)
@@ -151,12 +181,15 @@ def main() -> None:
                                   horizon_steps=args.steps)
                     if args.inject_mtbf_steps else None)
         chaos = make_chaos(args, kinds=TRAIN_KINDS, n_targets=1,
-                           horizon=args.chaos_horizon or args.steps)
+                           horizon=args.chaos_horizon or args.steps,
+                           tracer=ctx.tracer)
         coord = TrainingCoordinator(
             train_step=step_fn, params=params, opt_state=opt_state,
-            pipeline=pipeline, store=CheckpointStore(args.ckpt_dir),
+            pipeline=pipeline,
+            store=CheckpointStore(args.ckpt_dir, tracer=ctx.tracer),
             interval=DynamicInterval(gamma_s=args.ckpt_gamma_s),
-            injector=injector, chaos=chaos)
+            injector=injector, chaos=chaos, tracer=ctx.tracer,
+            registry=ctx.registry)
 
         t0 = time.time()
         report = coord.run(args.steps)
@@ -182,6 +215,24 @@ def main() -> None:
     print(f"loss: first10%={first:.4f} last10%={last:.4f} "
           f"({'improved' if last < first else 'NOT improved'}) "
           f"wall={dt:.1f}s ({dt / max(report.steps_completed, 1):.2f}s/step)")
+    if profiled is not None:
+        try:
+            profiled.capture_cost(coord.params, coord.opt_state,
+                                  coord.pipeline.batch_at(0))
+        except Exception as e:   # cost_analysis is best-effort per backend
+            print(f"profile: cost_analysis unavailable ({e})")
+        prof = profiled.report()
+        mean_ms = (prof["mean_s"] or 0.0) * 1e3
+        print(f"profile: compile {prof['compile_s'] or 0.0:.2f}s, "
+              f"{prof['calls']} steps mean {mean_ms:.1f} ms"
+              + (f", {prof['flops']:.3g} FLOP/step"
+                 if prof["flops"] else ""))
+        save_profiles(f"{args.trace_dir}/profile.json", [profiled])
+    if ctx.finish() is not None:
+        rec = ctx.recorder
+        print(f"trace: {len(rec.dumps)} dump(s) + metrics under "
+              f"{args.trace_dir} (faults seen {dict(rec.faults_seen)}, "
+              f"recoveries {dict(rec.recoveries_seen)})")
     if args.chaos_assert:
         assert chaos is not None, "--chaos-assert needs an active chaos run"
         assert chaos.applied, "chaos trace fired no events"

@@ -63,6 +63,7 @@ from repro.distributed.steps import make_prefill_step, make_serve_step
 from repro.ft.interval import DynamicInterval
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.obs.trace import NULL_TRACER
 
 from .metrics import ServeMetrics
 from .queue import AdmissionQueue, Request, WorkItem, prompt_bucket
@@ -129,7 +130,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig | None = None, *,
                  pool: WorkerPool, policy: ReplicaPolicy | None = None,
                  params=None, metrics: ServeMetrics | None = None,
-                 chaos=None, seed: int = 0):
+                 chaos=None, seed: int = 0, tracer=None):
         ok, why = engine_supported(cfg)
         if not ok:
             raise ValueError(f"{cfg.name}: {why}")
@@ -146,6 +147,7 @@ class ServeEngine:
                 f"learned decoder position table ({cfg.max_decode_len})")
         self.pool = pool
         self.chaos = chaos   # repro.chaos.ChaosEngine | None
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.shed: set[int] = set()   # rids dropped in degraded mode
         self.policy = policy or uniform_policy(1)
         self.params = (params if params is not None
@@ -211,8 +213,11 @@ class ServeEngine:
         if retry_after is not None:
             self.rejected[req.rid] = retry_after
             self.metrics.mark_rejected(req.rid, self.step_no, retry_after)
+            self.tracer.event("serve.reject", rid=req.rid,
+                              retry_after=retry_after)
             return 0
         self.requests[req.rid] = req
+        self.tracer.event("serve.admit", rid=req.rid, rep=rep)
         return rep
 
     # -- chaos injection (repro.chaos taxonomy) ------------------------------
@@ -240,6 +245,7 @@ class ServeEngine:
     def _on_worker_failures(self, t: int) -> None:
         for wid in self.pool.step_failures(t):
             self.metrics.failures += 1
+            self.tracer.event("serve.worker_failure", worker=wid, step=t)
             self.interval.record_failure(float(t))
             self.interval.record_repair(float(self.pool.mttr_steps))
             for sid in self.pool.slots_of(wid):
@@ -284,6 +290,8 @@ class ServeEngine:
             self.queue.submit(WorkItem(self.requests[rid], copy_id=0,
                                        snapshot=snap, is_resubmission=True))
             self.metrics.resubmissions += 1
+            self.tracer.recovery("host_crash", rid=rid,
+                                 from_snapshot=snap is not None)
 
     # -- degraded mode: deadline-aware load shedding -------------------------
     def _min_finish_step(self, item: WorkItem, t: int) -> int:
@@ -336,6 +344,8 @@ class ServeEngine:
             self.queue.cancel(rid)
             self.shed.add(rid)
             self.metrics.mark_shed(rid, t)
+            self.tracer.recovery("capacity_loss", rid=rid, action="shed",
+                                 step=t)
 
     # -- admission into freed slots ------------------------------------------
     def _admit(self, t: int) -> None:
@@ -397,6 +407,8 @@ class ServeEngine:
             # full re-prefill — never resume from garbage decode state
             self.metrics.snapshot_restore_failures += 1
             self.store.drop(snap.rid)
+            self.tracer.recovery("snapshot_corrupt", rid=req.rid,
+                                 action="reprefill")
             snap = None
         if snap is not None:
             row = jax.tree.map(jnp.asarray, snap.cache_row)
@@ -405,6 +417,8 @@ class ServeEngine:
             slot.tokens = list(snap.tokens)
             slot.last_token = snap.last_token
             self.metrics.restores += 1
+            self.tracer.event("serve.resume", rid=req.rid, pos=snap.pos,
+                              banked=len(snap.tokens))
         else:
             p = req.prompt_len
             offset = self.cfg.n_image_tokens or 0
@@ -413,9 +427,11 @@ class ServeEngine:
             # prompt length instead of the padded bucket
             exact = self.cfg.rwkv or self.cfg.rglru
             seq = p if exact else prompt_bucket(p)
-            logits, row1 = self._prefill(seq)(
-                self.params, self._prefill_batch(req, seq),
-                jnp.asarray([offset + p - 1], jnp.int32))
+            with self.tracer.span("serve.prefill", rid=req.rid, seq=seq,
+                                  step=t):
+                logits, row1 = self._prefill(seq)(
+                    self.params, self._prefill_batch(req, seq),
+                    jnp.asarray([offset + p - 1], jnp.int32))
             self.cache = self._insert(self.cache, slot.sid, row1)
             tok = int(np.argmax(np.asarray(logits[0])))
             slot.pos = offset + p
@@ -442,9 +458,11 @@ class ServeEngine:
             toks[s.sid, 0] = s.last_token
             poss[s.sid] = s.pos
             live[s.sid] = s.busy and s.sid not in stalled
-        nxt, _, self.cache = self._serve(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(poss),
-            jnp.asarray(live))
+        with self.tracer.span("serve.decode", track="serve", step=t,
+                              live=len(busy), stalled=len(stalled)):
+            nxt, _, self.cache = self._serve(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(poss), jnp.asarray(live))
         nxt = np.asarray(nxt)
         for s in busy:
             tok = int(nxt[s.sid, 0])
@@ -461,6 +479,8 @@ class ServeEngine:
         rid = slot.rid
         self.completed[rid] = list(slot.tokens[:slot.max_new])
         self.metrics.complete(rid, t)
+        self.tracer.event("serve.finish", rid=rid, step=t,
+                          tokens=slot.max_new)
         self.queue.cancel(rid)
         self.store.drop(rid)
         for sid in sorted(self.active.get(rid, set())):
@@ -493,6 +513,8 @@ class ServeEngine:
                 self.metrics.snapshots += 1
                 self.metrics.snapshot_overhead_tokens += \
                     self.ecfg.snapshot_gamma
+                self.tracer.event("serve.snapshot", rid=s.rid, pos=s.pos,
+                                  step=t)
                 s.since_snapshot = 0
 
     # -- main loop -----------------------------------------------------------

@@ -15,12 +15,24 @@ Online counterparts of the simulator metrics in ``repro.core.metrics``
   they executed);
 * **goodput** — requests completed within their deadline per 1k decode
   steps (the serving analogue of workflow success rate x 1/TET).
+
+Since the ``repro.obs`` unification the counters live in a
+:class:`~repro.obs.metrics.MetricsRegistry` as three labeled families —
+``serve_tokens_total{kind=...}``, ``serve_events_total{kind=...}`` and
+``serve_drops_total{reason=...}`` — and :class:`ServeMetrics` is a thin
+compatibility shim: the legacy attribute names (``metrics.failures += 1``,
+``metrics.rejected_on_arrival``) read and write the corresponding labeled
+series via ``__getattr__``/``__setattr__``, so the engine and every
+existing test keep working unchanged while exporters see one registry.
+Pass a shared registry to pool serving series with the rest of a run.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["RequestRecord", "ServeMetrics", "format_table"]
 
@@ -53,25 +65,65 @@ class RequestRecord:
 
 
 class ServeMetrics:
-    def __init__(self) -> None:
-        self.records: dict[int, RequestRecord] = {}
-        self.prefill_tokens = 0
-        self.decode_tokens = 0
-        self.snapshot_overhead_tokens = 0.0
-        self.failures = 0
-        self.resubmissions = 0
-        self.restores = 0
-        self.snapshots = 0
-        # degraded-mode / chaos counters
-        self.shed = 0                        # requests load-shed whole
-        self.rejected_on_arrival = 0         # queue-depth bound rejections
-        self.hedge_drops = 0                 # queued hedge copies dropped
-        self.capacity_events = 0
-        self.slowdown_events = 0
-        self.snapshots_corrupted = 0         # injected corruptions applied
-        self.snapshot_restore_failures = 0   # checksum fails -> re-prefill
+    # legacy attribute -> (registry metric, labels).  Reads and writes on
+    # these names go through the registry series; everything else is a
+    # normal instance attribute.
+    _SERIES = {
+        "prefill_tokens": ("serve_tokens_total", {"kind": "prefill"}),
+        "decode_tokens": ("serve_tokens_total", {"kind": "decode"}),
+        "snapshot_overhead_tokens": ("serve_tokens_total",
+                                     {"kind": "snapshot_overhead"}),
+        "failures": ("serve_events_total", {"kind": "worker_failure"}),
+        "resubmissions": ("serve_events_total", {"kind": "resubmission"}),
+        "restores": ("serve_events_total", {"kind": "snapshot_restore"}),
+        "snapshots": ("serve_events_total", {"kind": "snapshot"}),
+        "capacity_events": ("serve_events_total",
+                            {"kind": "capacity_loss"}),
+        "slowdown_events": ("serve_events_total", {"kind": "slowdown"}),
+        "snapshots_corrupted": ("serve_events_total",
+                                {"kind": "snapshot_corrupt"}),
+        "snapshot_restore_failures": ("serve_events_total",
+                                      {"kind": "snapshot_verify_fail"}),
+        "shed": ("serve_drops_total", {"reason": "shed"}),
+        "rejected_on_arrival": ("serve_drops_total",
+                                {"reason": "rejected_on_arrival"}),
+        "hedge_drops": ("serve_drops_total", {"reason": "hedge"}),
         # tripwire: a request past its first token must never be dropped
-        self.past_first_token_drops = 0
+        "past_first_token_drops": ("serve_drops_total",
+                                   {"reason": "past_first_token"}),
+    }
+
+    def __init__(self, registry: MetricsRegistry | None = None) -> None:
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.records: dict[int, RequestRecord] = {}
+        self._counters = {
+            "serve_tokens_total": self.registry.counter(
+                "serve_tokens_total",
+                "tokens processed across all request copies, by kind",
+                ("kind",)),
+            "serve_events_total": self.registry.counter(
+                "serve_events_total",
+                "serving-side fault/recovery events by kind", ("kind",)),
+            "serve_drops_total": self.registry.counter(
+                "serve_drops_total",
+                "request/copy drops by reason", ("reason",)),
+        }
+
+    def __getattr__(self, name):
+        # only reached when normal lookup fails, i.e. for _SERIES names
+        series = ServeMetrics._SERIES.get(name)
+        if series is None:
+            raise AttributeError(name)
+        metric, labels = series
+        return self.__dict__["_counters"][metric].value(**labels)
+
+    def __setattr__(self, name, value) -> None:
+        series = ServeMetrics._SERIES.get(name)
+        if series is None:
+            object.__setattr__(self, name, value)
+            return
+        metric, labels = series
+        self.__dict__["_counters"][metric].set(value, **labels)
 
     # -- lifecycle hooks (called by the engine) ------------------------------
     def register(self, req) -> None:
